@@ -1,0 +1,99 @@
+"""Roofline analysis from dry-run artifacts (assignment §Roofline).
+
+Per (arch × shape × mesh) cell, from the compiled dry-run JSON:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs           [s]
+  memory term     = HLO_bytes_per_device / HBM_bw               [s]
+  collective term = collective_bytes_per_device / (2 · link_bw) [s]
+(all quantities are per-device — SPMD HLO shapes are per-partition; the
+"chips ×" division of the assignment formulas is therefore already applied).
+
+The collective denominator uses 2 usable ICI links per mesh axis (v5e 2D
+torus, ~50 GB/s/link each way).  Cross-pod (DCI) bytes are not separated by
+the parser, so multi-pod cells carry a footnote, not a different rate.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9       # bytes/s per chip
+LINK_BW = 50e9       # bytes/s per ICI link
+LINKS = 2            # usable links per collective step (ring on a torus axis)
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    chips = rec["devices"]
+    t_comp = hlo["flops_per_device"] / PEAK
+    # memory term: XLA's fusion-aware 'bytes accessed' counts while bodies
+    # once; scale by the trip-corrected/raw FLOP ratio (loops are uniform in
+    # this codebase: layer scans, pipeline supersteps, attention chunks).
+    raw = rec.get("cost_raw", {})
+    raw_flops = max(raw.get("flops_per_device", 0.0), 1.0)
+    trip_ratio = max(1.0, hlo["flops_per_device"] / raw_flops)
+    mem_bytes = raw.get("bytes_per_device", hlo["bytes_per_device"]) * trip_ratio
+    t_mem = mem_bytes / HBM_BW
+    t_coll = hlo["collective_bytes_per_device"] / (LINKS * LINK_BW)
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])
+    model_flops = rec["model_flops"]
+    hlo_total = hlo["flops_per_device"] * chips
+    t_bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful model FLOPs per chip-second at the bound
+    frac = (model_flops / chips / t_bound) / PEAK if t_bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "mem_bytes_per_device": mem_bytes,
+        "dominant": dom[0],
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": frac,
+        "peak_mem_gib": rec["memory"]["peak_per_device"] / 2**30,
+        "plan": rec.get("plan", {}),
+    }
+
+
+def load_all(dirpath: str = "results/dryrun") -> List[Dict]:
+    out = []
+    for p in sorted(Path(dirpath).glob("*.json")):
+        rec = json.loads(p.read_text())
+        t = roofline_terms(rec)
+        if t:
+            out.append(t)
+    return out
+
+
+def render_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<18} {'shape':<12} {'mesh':<9} {'t_comp':>9} {'t_mem':>9} "
+           f"{'t_coll':>9} {'dominant':<11} {'useful':>7} {'roofl%':>7} {'memGiB':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<9} "
+            f"{r['t_compute_s']:>9.4f} {r['t_memory_s']:>9.4f} "
+            f"{r['t_collective_s']:>9.4f} {r['dominant']:<11} "
+            f"{r['useful_ratio']:>7.2f} {100 * r['roofline_fraction']:>6.1f}% "
+            f"{r['peak_mem_gib']:>7.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print(render_table(rows))
+    print()
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+              f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+              f"useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

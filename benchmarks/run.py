@@ -1,0 +1,69 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1|fig1|fig2|fig3|bo|fig5|kernels]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def kernel_microbench():
+    """Wall-time micro-bench of the Pallas kernels (interpret mode on CPU —
+    the numbers are correctness-path timings, not TPU performance)."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 512, 4, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D), jnp.float32)
+
+    def timeit(fn, n=3):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
+
+    t_ref = timeit(lambda: ref.mha_reference(q, k, v, causal=True))
+    rows.append(("kernels/mha_oracle_xla", t_ref, f"S={S} H={H} D={D}"))
+    t_pl = timeit(lambda: flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                                          interpret=True), n=1)
+    rows.append(("kernels/flash_pallas_interpret", t_pl,
+                 "interpret-mode (correctness path, not TPU perf)"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures
+
+    suites = dict(paper_figures.ALL)
+    suites["kernels"] = kernel_microbench
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        for row in fn():
+            n, us, derived = row
+            print(f"{n},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

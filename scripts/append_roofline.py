@@ -1,0 +1,13 @@
+"""Regenerate results/roofline_table.txt and refresh EXPERIMENTS.md's table."""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.roofline import load_all, render_table
+
+rows = load_all()
+base = [r for r in rows if r["mesh"] in ("pod", "multipod")]
+table = render_table(base)
+Path("results/roofline_table.txt").write_text(table + "\n")
+print(table)

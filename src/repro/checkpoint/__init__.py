@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (  # noqa: F401
+    save_checkpoint, restore_latest, restore_step, list_steps, CheckpointError,
+)
+from repro.checkpoint.elastic import reshard_state  # noqa: F401

@@ -1,0 +1,52 @@
+"""Elastic re-scaling: restore a checkpoint under a different parallelism plan.
+
+Checkpoints are mesh-independent (canonical unstacked layout); this module
+converts a train state between plans — re-stacking the pipeline axis and
+letting the launcher re-shard onto the new mesh with ``jax.device_put``.
+Node loss on a real fleet = restart with a smaller plan; node gain = larger.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.core.pipeline import stack_for_pipeline, unstack_from_pipeline
+from repro.core.recipe import ParallelismConfig
+
+
+def canonicalize_state(state: Dict[str, Any], plan: ParallelismConfig) -> Dict[str, Any]:
+    """Remove plan-specific layout (pipeline stacking) before saving."""
+    if plan.pp <= 1:
+        return state
+    def fix(tree):
+        if isinstance(tree, dict) and "blocks" in tree:
+            tree = dict(tree)
+            tree["blocks"] = unstack_from_pipeline(tree["blocks"])
+        return tree
+    out = dict(state)
+    out["params"] = fix(state["params"])
+    out["opt"] = dict(state["opt"],
+                      m=fix(state["opt"]["m"]), v=fix(state["opt"]["v"]))
+    if "ef" in state:
+        out["ef"] = fix(state["ef"])
+    return out
+
+
+def reshard_state(state: Dict[str, Any], new_plan: ParallelismConfig) -> Dict[str, Any]:
+    """Canonical state → layout for ``new_plan`` (inverse of canonicalize)."""
+    if new_plan.pp <= 1:
+        return state
+    def fix(tree):
+        if isinstance(tree, dict) and "blocks" in tree:
+            tree = dict(tree)
+            tree["blocks"] = stack_for_pipeline(tree["blocks"], new_plan.pp)
+        return tree
+    out = dict(state)
+    out["params"] = fix(state["params"])
+    out["opt"] = dict(state["opt"],
+                      m=fix(state["opt"]["m"]), v=fix(state["opt"]["v"]))
+    if "ef" in state:
+        out["ef"] = fix(state["ef"])
+    return out

@@ -1,0 +1,54 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned architecture
+plus the paper's own GPT sizes (3.6B / 20B / 175B)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "internvl2_1b",
+    "xlstm_125m",
+    "h2o_danube_3_4b",
+    "qwen15_32b",
+    "granite_3_2b",
+    "phi3_mini_38b",
+    "olmoe_1b_7b",
+    "deepseek_moe_16b",
+    "whisper_base",
+    "hymba_15b",
+    # the paper's own models
+    "gpt_36b",
+    "gpt_20b",
+    "gpt_175b",
+]
+
+ALIASES: Dict[str, str] = {
+    "internvl2-1b": "internvl2_1b",
+    "xlstm-125m": "xlstm_125m",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "qwen1.5-32b": "qwen15_32b",
+    "granite-3-2b": "granite_3_2b",
+    "phi3-mini-3.8b": "phi3_mini_38b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-base": "whisper_base",
+    "hymba-1.5b": "hymba_15b",
+    "gpt-3.6b": "gpt_36b",
+    "gpt-20b": "gpt_20b",
+    "gpt-175b": "gpt_175b",
+}
+
+ASSIGNED: List[str] = ARCH_IDS[:10]
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,15 @@
+"""DeepSeekMoE-16B: 2 shared + 64 routed experts top-6, fine-grained;
+first layer dense. [arXiv:2401.06066; hf]
+28L d_model=2048 16H d_ff=1408(per expert) vocab=102400.
+Dense first layer uses d_ff = 4*?? — DeepSeekMoE uses 10944 for layer 0.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=10944, vocab_size=102400,
+    n_experts=64, n_shared_experts=2, top_k=6, moe_d_ff=1408, first_k_dense=1,
+    rope_theta=10000.0, norm="rmsnorm", gated_mlp=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,12 @@
+"""Phi-3-mini-3.8B: RoPE + SwiGLU + GQA(kv=32 — full MHA).
+[arXiv:2404.14219; unverified]  32L d_model=3072 32H d_ff=8192 vocab=32064.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=32064,
+    rope_theta=10000.0, norm="rmsnorm", gated_mlp=True,
+    tie_embeddings=False,
+)

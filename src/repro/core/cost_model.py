@@ -1,0 +1,142 @@
+"""Analytic step-time model for the recipe — the engine behind Figs 1-3/5 and
+the BO objective (§5).  All terms are plain napkin math over hardware
+constants; the dry-run roofline (benchmarks/roofline.py) is the compiled-HLO
+counterpart for the TPU target.
+
+Terms modeled per optimizer step under 1F1B with GAS micro-batches:
+  compute   : 6·N_active·tokens (+attention) with remat multiplier & GEMM eff
+  TP comm   : 4 all-reduces/layer of (mbs·s·d) activations — domain-aware BW
+              (the paper's Fig-1 cliff when TP crosses the fast domain)
+  PP p2p    : 2 boundary transfers per micro-batch per stage
+  bubble    : (PP-1)/(GAS+PP-1)  — the paper's PP/M law
+  DP sync   : ZeRO-1 reduce-scatter(grads) + all-gather(params), partly
+              overlapped with the pipeline flush
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.recipe import ParallelismConfig
+from repro.core.systems import System, TPU_V5E
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    t_compute: float
+    t_tp: float
+    t_pp: float
+    t_dp_exposed: float
+    t_step: float
+    bubble: float
+    model_tflops_per_device: float
+    hw_utilization: float        # fraction of per-device peak
+    feasible: bool
+    mem_total: float
+    mem_limit: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: routed top-k + shared only)."""
+    n = cfg.n_params()
+    if cfg.family != "moe":
+        return n
+    moe_layers = cfg.n_layers - cfg.first_k_dense
+    all_expert = moe_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    act_expert = moe_layers * cfg.top_k * 3 * cfg.d_model * cfg.moe_d_ff
+    return n - all_expert + act_expert
+
+
+def model_flops_per_token(cfg: ModelConfig, seq: int) -> float:
+    """Useful fwd+bwd FLOPs per token: 6·N_active + causal attention term."""
+    n = active_params(cfg)
+    w = min(cfg.swa_window or seq, seq)
+    attn = 6.0 * cfg.n_layers * cfg.n_heads * cfg.hd * w  # 12·d_attn·s, halved causal
+    if cfg.family == "ssm":
+        attn = 0.0
+    return 6.0 * n + attn
+
+
+def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
+                  system: System = TPU_V5E, seq: int = 2048,
+                  dp_overlap: float = 0.6) -> StepCost:
+    tokens_replica = plan.mbs * plan.gas * seq
+    fpt = model_flops_per_token(cfg, seq)
+    flops_replica = fpt * tokens_replica
+    remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[plan.remat_policy]
+
+    # --- compute (per micro-batch, per device) ---
+    m_dim = plan.mbs * seq                        # GEMM token dim per device
+    eff = system.gemm_eff * m_dim / (m_dim + system.eff_knee_m)
+    flops_micro_dev = flops_replica * remat_mult / plan.gas / plan.pp / plan.tp
+    t_compute_micro = flops_micro_dev / (system.peak_flops * eff)
+
+    # --- TP collectives (per micro-batch, per stage) ---
+    layers_stage = cfg.n_layers / plan.pp
+    if plan.tp > 1:
+        ar_bytes = plan.mbs * seq * cfg.d_model * 2.0
+        crosses_pod = plan.tp > (system.pod_size or 1 << 30)
+        bw = system.domain_bw(plan.tp, crosses_pod=crosses_pod)
+        n_coll = 4.0                               # 2 fwd + 2 bwd per layer
+        t_ar = 2.0 * (plan.tp - 1) / plan.tp * ar_bytes / bw
+        if plan.sequence_parallel:
+            t_ar *= 0.75                           # RS+AG overlap better than AR
+        t_tp_micro = layers_stage * n_coll * t_ar
+    else:
+        t_tp_micro = 0.0
+
+    # --- PP point-to-point (per micro-batch, per boundary) ---
+    if plan.pp > 1:
+        p2p_bytes = plan.mbs * seq * cfg.d_model * 2.0
+        t_pp_micro = 2.0 * p2p_bytes / system.slow_bw
+    else:
+        t_pp_micro = 0.0
+
+    # --- 1F1B assembly ---
+    supersteps = plan.gas + plan.pp - 1
+    t_pipe = supersteps * (t_compute_micro + t_tp_micro + t_pp_micro)
+    bubble = plan.bubble_fraction
+
+    # --- ZeRO-DP sync ---
+    dpw = plan.dp * plan.pods
+    if dpw > 1:
+        shard = 2.0 * cfg.n_params() / (plan.tp * plan.pp)    # bf16 grads bytes
+        crosses_pod = plan.pods > 1
+        bw = system.domain_bw(dpw, crosses_pod=crosses_pod)
+        if not crosses_pod and plan.dp <= system.fast_domain:
+            bw = system.fast_bw if plan.tp == 1 else system.slow_bw
+        t_dp = 2.0 * shard * (dpw - 1) / dpw / bw             # RS + AG
+    else:
+        t_dp = 0.0
+    t_dp_exposed = t_dp * (1.0 - dp_overlap)
+
+    t_step = t_pipe + t_dp_exposed
+
+    # --- memory feasibility ---
+    from repro.core import memory
+    mem = memory.per_device_bytes(
+        cfg, dp=plan.dp, tp=plan.tp, pp=plan.pp, pods=plan.pods,
+        mbs=plan.mbs, gas=plan.gas, seq=seq, zero_stage=plan.zero_stage,
+        remat=plan.remat_policy)
+    feasible = mem["total"] <= system.hbm_bytes
+
+    useful = fpt * tokens_replica * plan.dp * plan.pods       # no remat multiplier
+    tflops_dev = useful / t_step / plan.world / 1e12
+    return StepCost(
+        t_compute=supersteps * t_compute_micro,
+        t_tp=supersteps * t_tp_micro,
+        t_pp=supersteps * t_pp_micro,
+        t_dp_exposed=t_dp_exposed,
+        t_step=t_step,
+        bubble=bubble,
+        model_tflops_per_device=tflops_dev,
+        hw_utilization=tflops_dev * 1e12 / system.peak_flops,
+        feasible=feasible,
+        mem_total=mem["total"],
+        mem_limit=system.hbm_bytes,
+    )

@@ -1,0 +1,131 @@
+"""The paper's parallelism recipe as a first-class object.
+
+``ParallelismConfig`` is the (TP, PP, DP, MBS, GAS, ZeRO) tuple the paper
+benchmarks and autotunes; ``build_recipe_mesh`` factorizes a physical
+production mesh into the logical (pod, data, pp, tp) mesh; ``RecipeAdvisor``
+encodes the paper's §7 checklist as executable constraints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.systems import System, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismConfig:
+    tp: int = 1              # tensor-parallel degree  (paper: {4, 8}, ≤ node)
+    pp: int = 1              # pipeline stages          (paper: {12,16,20,24})
+    dp: int = 1              # data-parallel ways inside a pod
+    pods: int = 1            # pod axis (outer, slowest domain)
+    mbs: int = 1             # micro-batch size         (paper: [1,10])
+    gas: int = 1             # micro-batches per optimizer step (paper GAS)
+    zero_stage: int = 1      # ZeRO stage for the DP axis (paper uses 1)
+    sequence_parallel: bool = False   # beyond-paper: RS/AG TP variant
+    remat_policy: str = "full"        # none | dots | full | stage (pipeline)
+    gather_params_once: bool = False  # beyond-paper: ZeRO-3 + pipeline — cast
+    # params to bf16 and all-gather them ONCE per step instead of letting XLA
+    # re-gather the fp32 masters inside every pipeline superstep.
+
+    @property
+    def world(self) -> int:
+        return self.tp * self.pp * self.dp * self.pods
+
+    @property
+    def global_batch(self) -> int:
+        return self.mbs * self.gas * self.dp * self.pods
+
+    @property
+    def bubble_fraction(self) -> float:
+        """1F1B bubble ≈ (PP-1)/(GAS+PP-1) — the paper's PP/M law."""
+        return (self.pp - 1) / (self.gas + self.pp - 1)
+
+    def validate(self, n_layers: int, *, devices: Optional[int] = None) -> None:
+        if n_layers % self.pp:
+            raise ValueError(f"pp={self.pp} does not divide n_layers={n_layers}")
+        if devices is not None and self.world != devices:
+            raise ValueError(f"world={self.world} != devices={devices}")
+
+
+def factorize_production_mesh(mesh: Mesh, plan: ParallelismConfig) -> Mesh:
+    """Reshape the fixed physical production mesh ((data,model) or
+    (pod,data,model)) into the logical (pod, data, pp, tp) recipe mesh.
+
+    The TP axis is innermost — consecutive device ids — so TP collectives stay
+    on the contiguous ICI ring (the TPU analogue of the paper's "TP inside the
+    node" rule).  PP is the next axis out; DP/pod outermost.
+    """
+    devs = mesh.devices
+    if devs.ndim == 2:           # (data, model)
+        pods = 1
+        data, model = devs.shape
+    else:                        # (pod, data, model)
+        pods, data, model = devs.shape
+    if plan.pods != pods or plan.dp != data or plan.tp * plan.pp != model:
+        raise ValueError(
+            f"plan (pods={plan.pods}, dp={plan.dp}, pp*tp={plan.pp * plan.tp}) "
+            f"does not factorize mesh {devs.shape}")
+    new = devs.reshape(pods, data, plan.pp, plan.tp)
+    return Mesh(new, ("pod", "data", "pp", "tp"))
+
+
+def axis_mapping(plan: ParallelismConfig) -> Dict[str, object]:
+    """Logical axis → mesh axis mapping for `repro.core.sharding`."""
+    mapping: Dict[str, object] = {
+        "tp": "tp",
+        "stage": "pp",
+        "batch": ("pod", "data"),
+        "expert": "tp",            # EP rides the model axis (beyond-paper)
+        "layers": None,
+        "embed": None,
+        "seq": "tp" if plan.sequence_parallel else None,
+    }
+    if plan.zero_stage >= 3:
+        mapping["embed"] = "data"  # FSDP params over the intra-pod data axis
+    return mapping
+
+
+def fsdp_axes(plan: ParallelismConfig) -> Tuple[str, ...]:
+    """Mesh axes the ZeRO optimizer-state shard spreads over."""
+    return ("pod", "data") if plan.zero_stage >= 1 else ()
+
+
+# ---------------------------------------------------------------------------
+# the paper's §7 checklist as an advisor
+# ---------------------------------------------------------------------------
+
+class RecipeAdvisor:
+    """Encodes the paper's conclusions: TP ≤ fast domain; keep the pipeline
+    full (GAS ≥ 4·PP keeps bubble < 25 %); scale out via (ZeRO-)DP."""
+
+    def __init__(self, system: System = TPU_V5E):
+        self.system = system
+
+    def check(self, plan: ParallelismConfig) -> Dict[str, str]:
+        warnings = {}
+        if plan.tp > self.system.fast_domain:
+            warnings["tp"] = (
+                f"TP={plan.tp} crosses the fast domain ({self.system.fast_domain}): "
+                "per-layer all-reduces will hit the slow interconnect (paper Fig 1)")
+        if plan.pp > 1 and plan.gas < 4 * plan.pp:
+            warnings["bubble"] = (
+                f"GAS={plan.gas} gives bubble {plan.bubble_fraction:.1%}; "
+                f"paper Fig 2 recommends GAS ≥ {4 * plan.pp} for PP={plan.pp}")
+        if plan.zero_stage >= 3 and plan.pods > 1:
+            warnings["zero"] = ("ZeRO-3 param all-gathers would cross the pod "
+                                "boundary every layer; keep ZeRO-3 intra-pod")
+        return warnings
+
+    def suggest(self, n_layers: int, devices: int, *, min_gas: int = 8) -> ParallelismConfig:
+        """Greedy recipe: max TP inside the fast domain that divides heads,
+        then PP to fit, then DP."""
+        tp = min(self.system.fast_domain, devices)
+        pp = 1
+        dp = devices // (tp * pp)
+        return ParallelismConfig(tp=tp, pp=pp, dp=dp, gas=max(min_gas, 4 * pp))

@@ -1,0 +1,56 @@
+"""Weak/strong scaling harness (paper §6, Fig 5).
+
+Given a base plan, produce the scaled plans and efficiency curves under the
+cost model — and, on real hardware, drive the same sweep with measured step
+times (the harness only needs a ``measure(plan) → seconds`` callable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cost_model import estimate_step
+from repro.core.recipe import ParallelismConfig
+from repro.core.systems import System, TPU_V5E
+from repro.models.config import ModelConfig
+
+
+def weak_plan(base: ParallelismConfig, factor: int) -> ParallelismConfig:
+    """Grow DP with the device count; per-replica work constant."""
+    return dataclasses.replace(base, dp=base.dp * factor)
+
+
+def strong_plan(base: ParallelismConfig, factor: int) -> ParallelismConfig:
+    """Fixed global batch: DP grows, per-replica work shrinks.  Shrink the
+    micro-batch SIZE before the micro-batch COUNT — dividing GAS first blows
+    up the pipeline bubble (the paper's Fig 2 in reverse)."""
+    shrink_mbs = min(factor, base.mbs)
+    mbs = base.mbs // shrink_mbs
+    gas = max(base.pp, int(round(base.gas / (factor / shrink_mbs))))
+    return dataclasses.replace(base, dp=base.dp * factor, mbs=mbs, gas=gas)
+
+
+def scaling_curve(cfg: ModelConfig, base: ParallelismConfig, *,
+                  kind: str, factors=(1, 2, 4, 8),
+                  system: System = TPU_V5E, seq: int = 2048,
+                  measure: Optional[Callable[[ParallelismConfig], float]] = None,
+                  ) -> List[Dict[str, float]]:
+    """Efficiency = per-device throughput at factor f / at factor 1."""
+    mk = weak_plan if kind == "weak" else strong_plan
+    rows = []
+    base_tput = None
+    for f in factors:
+        plan = mk(base, f)
+        if measure is not None:
+            t = measure(plan)
+            tokens = plan.global_batch * seq
+            tput = tokens / t / plan.world
+        else:
+            tput = estimate_step(cfg, plan, system=system, seq=seq).model_tflops_per_device
+        if base_tput is None:
+            base_tput = tput
+        rows.append({"factor": f, "devices": plan.world,
+                     "per_device_throughput": tput,
+                     "efficiency": tput / base_tput})
+    return rows

@@ -1,0 +1,186 @@
+"""Step-function factory: assembles model, recipe (TP/PP/ZeRO), optimizer and
+compression into the jit-able ``train_step`` / ``serve_step`` the launcher,
+dry-run, and benchmarks all share."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import pipeline as pp_mod
+from repro.core import sharding as shd
+from repro.core import zero
+from repro.models.moe import moe_groups
+from repro.core.recipe import ParallelismConfig, axis_mapping
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+from repro.optim import adamw, schedule
+from repro.optim.compress import apply_compression, init_error_feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 200
+    total_steps: int = 10000
+    adam: adamw.AdamWConfig = adamw.AdamWConfig()
+    compression: Optional[str] = None      # None | bf16 | int8_ef
+
+
+def init_state(cfg: ModelConfig, plan: ParallelismConfig, key,
+               train_cfg: TrainConfig = TrainConfig()) -> Dict[str, Any]:
+    params = model_api.init_params(cfg, key)
+    if plan.pp > 1 and "blocks" in params:
+        params["blocks"] = pp_mod.stack_for_pipeline(params["blocks"], plan.pp)
+    state = {"params": params, "opt": adamw.init_opt_state(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if train_cfg.compression == "int8_ef":
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+def state_shardings(cfg: ModelConfig, state, mesh: Mesh, plan: ParallelismConfig):
+    """NamedSharding tree mirroring a train state (params + ZeRO opt + step)."""
+    p_sh = zero.param_shardings(cfg, state["params"], mesh, plan)
+    o_sh = {
+        "m": zero.opt_shardings(p_sh, state["params"], mesh, plan),
+        "v": zero.opt_shardings(p_sh, state["params"], mesh, plan),
+        "step": NamedSharding(mesh, P()),
+    }
+    out = {"params": p_sh, "opt": o_sh,
+           "step": NamedSharding(mesh, P())}
+    if "ef" in state:
+        out["ef"] = zero.opt_shardings(p_sh, state["params"], mesh, plan)
+    return out
+
+
+def batch_shardings(batch_spec, mesh: Mesh):
+    """Batch arrays are sharded over the (pod, data) axes on dim 0, falling
+    back to fewer axes when the global batch does not divide (e.g. batch 32
+    on a 2×32 pod×data world)."""
+    import numpy as np
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(x):
+        use = axes
+        while use:
+            ways = int(np.prod([mesh.shape[a] for a in use]))
+            if x.shape[0] % ways == 0 and x.shape[0] >= ways:
+                break
+            use = use[1:]  # drop the pod axis first
+        ax = use if len(use) > 1 else (use[0] if use else None)
+        return NamedSharding(mesh, P(ax, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, batch_spec)
+
+
+def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
+                    train_cfg: TrainConfig = TrainConfig(),
+                    mesh: Optional[Mesh] = None):
+    """Returns train_step(state, batch) → (state, metrics)."""
+    mapping = axis_mapping(plan)
+
+    def loss_fn(params, batch):
+        if plan.gather_params_once and mesh is not None:
+            # ZeRO-3 + pipeline: one bf16 cast + all-gather of the fp32
+            # masters up front; the superstep scan then reuses the gathered
+            # copy instead of re-gathering every iteration.  The cast's
+            # transpose delivers bf16 gradient accumulation (Table 1's 2 B
+            # gradients).
+            dtp = cfg.compute_dtype
+            nofsdp = dataclasses.replace(plan, zero_stage=min(plan.zero_stage, 1))
+            g_sh = zero.param_shardings(cfg, params, mesh, nofsdp)
+            params = jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x.astype(dtp) if x.dtype == jnp.float32 else x, s),
+                params, g_sh)
+        if plan.pp > 1:
+            return pp_mod.pipeline_loss(cfg, params, batch, plan)
+        return model_api.loss_fn(cfg, params, batch, remat_policy=plan.remat_policy)
+
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def train_step(state, batch):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+            grads, ef = apply_compression(grads, train_cfg.compression, state.get("ef"))
+            if mesh is not None and plan.zero_stage >= 2:
+                p_sh = zero.param_shardings(cfg, state["params"], mesh, plan)
+                o_sh = zero.opt_shardings(p_sh, state["params"], mesh, plan)
+                grads = zero.grad_constraint(grads, mesh, plan, o_sh)
+            lr = schedule.lr_schedule(state["step"], peak=train_cfg.peak_lr,
+                                      warmup=train_cfg.warmup,
+                                      total=train_cfg.total_steps)
+            params, opt, om = adamw.adamw_update(grads, state["opt"], state["params"],
+                                                 lr, train_cfg.adam)
+            new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+            if ef is not None:
+                new_state["ef"] = ef
+            metrics = dict(metrics, loss=loss, **om)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, plan: ParallelismConfig,
+                   mesh: Optional[Mesh] = None):
+    mapping = axis_mapping(plan)
+
+    def eval_step(params, batch):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx:
+            loss, metrics = model_api.loss_fn(cfg, params, batch, remat_policy="none")
+        return metrics
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig, plan: ParallelismConfig,
+                    mesh: Optional[Mesh] = None):
+    """One decode step over a batch of requests (the ``decode_*`` shapes)."""
+    mapping = axis_mapping(plan)
+
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def serve_step(params, token, t, caches):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            logits, caches = model_api.decode_step(cfg, params, token, t, caches)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, plan: ParallelismConfig,
+                 mesh: Optional[Mesh] = None, *, last_only: bool = False):
+    """``last_only`` returns just the final-position logits — what a serving
+    prefill actually needs before decode takes over (beyond-paper opt: drops
+    the (B, S, V) fp32 logits output and its collective/memory traffic)."""
+    mapping = axis_mapping(plan)
+
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def prefill(params, batch):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            logits = model_api.forward(cfg, params, batch, remat_policy="none",
+                                       last_only=last_only)
+        return logits
+
+    return prefill
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

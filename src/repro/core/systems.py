@@ -1,0 +1,77 @@
+"""Hardware profiles.
+
+Two systems matter here:
+
+* ``TPU_V5E`` — the TARGET for the TPU-native recipe, dry-run and roofline
+  (constants fixed by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+  ~50 GB/s/link ICI).
+* ``SMNG_P2`` — the paper's system (Intel Data Center GPU Max 1550 tiles,
+  Xe-Link intra-node, 2×HDR200 InfiniBand inter-node).  Used ONLY to validate
+  the cost model against the paper's measured numbers (Figs 1-5, Table 2).
+  Per-tile peak is the paper's implied 570 TFLOP/s (57 TF/s reported = "10 %
+  of theoretical peak per-tile bf16").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class System:
+    name: str
+    peak_flops: float            # bf16 FLOP/s per device (tile / chip)
+    hbm_bytes: float             # HBM capacity per device
+    hbm_bw: float                # bytes/s per device
+    fast_domain: int             # devices sharing the fast interconnect domain
+    fast_bw: float               # all-reduce-effective bytes/s per device, intra-domain
+    slow_bw: float               # bytes/s per device crossing domains (IB / DCI)
+    pod_size: int = 0            # devices per pod (TPU) — 0 if N/A
+    pod_bw: float = 0.0          # inter-pod bytes/s per device (DCI)
+    # compute-efficiency model: fraction of peak attainable by big GEMMs,
+    # and the matmul M-dim at which efficiency halves (small-batch penalty).
+    gemm_eff: float = 0.55
+    eff_knee_m: float = 256.0
+
+    def domain_bw(self, group: int, *, crosses_pod: bool = False) -> float:
+        """Effective per-device collective bandwidth for a group of devices."""
+        if crosses_pod and self.pod_bw:
+            return self.pod_bw
+        if group <= self.fast_domain:
+            return self.fast_bw
+        return self.slow_bw
+
+
+# TPU v5e: 2D ICI torus. Per assignment: ~50 GB/s/link, 197 TF bf16, 819 GB/s HBM.
+# A chip has 2 links per torus axis (+/-); ring all-reduce over an axis sustains
+# ~2 links → ~100 GB/s/device intra-pod. Inter-pod (DCI) ~6.25 GB/s/device.
+TPU_V5E = System(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bytes=16 * 2**30,
+    hbm_bw=819e9,
+    fast_domain=16,              # one 16-chip ICI ring (mesh 'model' axis)
+    fast_bw=100e9,
+    slow_bw=50e9,                # intra-pod, across rings (still ICI, fewer links)
+    pod_size=256,
+    pod_bw=6.25e9,               # DCI between pods
+    gemm_eff=0.62,
+    eff_knee_m=256.0,
+)
+
+# SuperMUC-NG Phase 2: per-tile figures. 4x PVC (8 tiles)/node; Xe-Link
+# intra-node; 2x HDR200 IB (50 GB/s/node aggregate = 6.25 GB/s/tile).
+SMNG_P2 = System(
+    name="smng_p2",
+    peak_flops=570e12,           # implied by paper: 57 TF/s ~ 10 % of peak
+    hbm_bytes=64 * 2**30,
+    hbm_bw=1.6e12,
+    fast_domain=8,               # one node = 8 tiles (the paper's TP ≤ 8 rule)
+    fast_bw=60e9,                # Xe-Link effective per tile
+    slow_bw=6.25e9,              # 400 Gb/s / 8 tiles
+    pod_size=0,
+    gemm_eff=0.16,               # out-of-the-box stack, power-capped (paper: ~10 % peak e2e)
+    eff_knee_m=512.0,
+)
+
+SYSTEMS = {s.name: s for s in (TPU_V5E, SMNG_P2)}

@@ -1,0 +1,96 @@
+"""ZeRO sharded data parallelism, expressed as XLA shardings (DeepSpeed's
+stages mapped to the GSPMD world):
+
+  stage 1 — optimizer states sharded over the DP axes; params/grads replicated.
+            XLA materializes the grad all-reduce as reduce-scatter into the
+            update + all-gather of new params (exactly ZeRO-1's schedule).
+  stage 2 — as 1, plus gradient buffers sharded (explicit constraint on the
+            grad tree inside the train step).
+  stage 3 — params themselves sharded over the intra-pod data axis (FSDP);
+            XLA inserts per-layer all-gathers inside the scan.
+
+The recipe keeps ZeRO-3 *intra-pod* (param all-gathers never cross DCI) while
+ZeRO-1's once-per-step collectives may span pods — the paper's "scale out via
+DP on the slow domain" rule."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import sharding as shd
+from repro.core.recipe import ParallelismConfig, axis_mapping
+from repro.models.config import ModelConfig
+
+
+def stacked_axes_fn(cfg: ModelConfig, plan: ParallelismConfig):
+    """How many leading stacking axes a given param path has."""
+    def f(path: str) -> int:
+        if "enc_blocks" in path or "dec_blocks" in path:
+            return 1
+        if path.startswith("blocks") or "/blocks" in path:
+            return 2 if plan.pp > 1 else 1
+        return 0
+    return f
+
+
+def param_shardings(cfg: ModelConfig, params_tree, mesh: Mesh,
+                    plan: ParallelismConfig):
+    """NamedSharding tree for the (possibly pipeline-stacked) param tree."""
+    specs = shd.tree_logical_specs(params_tree, stacked_axes_fn=stacked_axes_fn(cfg, plan))
+    return shd.resolve_tree(specs, mesh, axis_mapping(plan), shapes_tree=params_tree)
+
+
+def _zero_axes(mesh: Mesh, plan: ParallelismConfig) -> Tuple[str, ...]:
+    axes = []
+    for name in ("pod", "data"):
+        if name in mesh.axis_names and mesh.shape[name] > 1:
+            axes.append(name)
+    return tuple(axes)
+
+
+def zero_shard(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               axes: Tuple[str, ...]) -> P:
+    """Add the ZeRO axes to the largest divisible unsharded dim of a leaf."""
+    if not axes or not shape:
+        return spec
+    ways = int(np.prod([mesh.shape[a] for a in axes]))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p in parts:
+        if p is None:
+            continue
+        used.update(p if isinstance(p, tuple) else (p,))
+    if any(a in used for a in axes):
+        return spec
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % ways == 0 and shape[i] >= ways:
+            parts[i] = axes if len(axes) > 1 else axes[0]
+            return P(*parts)
+    return spec
+
+
+def opt_shardings(param_shardings_tree, params_tree, mesh: Mesh,
+                  plan: ParallelismConfig):
+    """Optimizer-state shardings: param shardings + ZeRO axes (stage ≥ 1)."""
+    if plan.zero_stage < 1:
+        return param_shardings_tree
+    axes = _zero_axes(mesh, plan)
+
+    def one(ns: NamedSharding, leaf):
+        return NamedSharding(mesh, zero_shard(ns.spec, leaf.shape, mesh, axes))
+
+    return jax.tree_util.tree_map(one, param_shardings_tree, params_tree)
+
+
+def grad_constraint(grads, mesh: Mesh, plan: ParallelismConfig, opt_sh):
+    """ZeRO-2: constrain grads to the optimizer-state sharding so XLA
+    reduce-scatters instead of all-reducing."""
+    if plan.zero_stage < 2:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, opt_sh)

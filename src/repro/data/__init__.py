@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, TokenDataset, SyntheticLM, make_dataset, batch_iterator,
+)

@@ -1,0 +1,100 @@
+"""Flash-decode for TPU (Pallas): single-token attention against a (possibly
+ring-buffer) KV cache, the hot kernel of the ``decode_32k`` / ``long_500k``
+serving shapes.
+
+The query position ``t`` arrives via scalar prefetch (SMEM) — the TPU
+idiom for runtime scalars that steer masking.  The K sweep is the innermost
+grid dimension with f32 accumulators in VMEM scratch (same online-softmax
+structure as the training kernel, degenerate q-block of 1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(t_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, bk: int, n_kv_blocks: int,
+                   window: Optional[int], scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    t = t_ref[0]
+    q = q_ref[...].reshape(1, -1).astype(jnp.float32) * scale  # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                   # (bk, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kpos = kpos_ref[0]                                       # (bk,)
+    s = (q @ k.T)[0]                                         # (bk,)
+    valid = (kpos >= 0) & (kpos <= t)
+    if window is not None:
+        valid &= kpos > t - window
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    # zero masked entries explicitly: exp(-inf − -inf) = 1 otherwise
+    p = jnp.exp(s - m_cur) * valid
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p[None, :] @ v)
+    m_ref[0] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30))[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, kpos: jax.Array,
+                     *, t: jax.Array, window: Optional[int] = None,
+                     bk: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, 1, Hq, D); k/v: (B, S, Hkv, D); kpos: (B, S) absolute positions
+    (-1 empty); t: scalar query position → (B, 1, Hq, D)."""
+    B, _, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    qh = q.reshape(B, Hq, D)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, bk=bk, n_kv_blocks=nk,
+                               window=window, scale=D ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, D), lambda b, h, ik, t: (b, h, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, t: (b, ik, h // g, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, t: (b, ik, h // g, 0)),
+                pl.BlockSpec((1, bk), lambda b, h, ik, t: (b, ik)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ik, t: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, D), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(t_arr, qh, k, v, kpos)
+    return out.reshape(B, 1, Hq, D)

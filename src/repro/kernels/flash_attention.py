@@ -1,0 +1,127 @@
+"""Flash attention for TPU (Pallas): online-softmax tiling with explicit
+BlockSpec VMEM residency; causal and sliding-window block skipping; GQA via
+the K/V index map (no materialized head repeat).
+
+TPU adaptation (DESIGN.md §2): the GPU flash kernel tunes for SRAM/warps; here
+the block shape is chosen for VMEM (≤ ~2 MB working set/step) and the MXU —
+q/k blocks are multiples of 128 in the sequence dims, D stays whole (head dims
+here: 64/120/128).  Grid order (B, Hq, nQ, nK) with the K dimension innermost
+and "arbitrary" semantics so the f32 accumulators live in VMEM scratch across
+the K sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, n_kv_blocks: int, causal: bool,
+                  window: Optional[int], scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # block-level skip: entirely masked-out tiles do no work
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
+    if window is not None:
+        relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                          # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        # zero masked entries explicitly: exp(-inf − -inf) = 1 otherwise
+        p = jnp.exp(s - m_cur[:, None]) * mask
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) → (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    # head-major layout so a block is (1, 1, seq_block, D)
+    qt = q.transpose(0, 2, 1, 3)          # (B, Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)          # (B, Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
+        window=window, scale=D ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=_scratch(bq, D),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _scratch(bq: int, D: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((bq, D), jnp.float32),   # acc
+        pltpu.VMEM((bq,), jnp.float32),     # running max m
+        pltpu.VMEM((bq,), jnp.float32),     # running sum l
+    ]
+
+
+def _compiler_params():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))

@@ -1,0 +1,40 @@
+"""Jit'd dispatch wrappers: model code calls these; they pick the Pallas
+kernel (TPU target / interpret validation) and fall back to the jnp oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+from repro.runtime import flags
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    from repro.kernels import flash_attention as fa
+    S = q.shape[1]
+    if S % 128 and S % 64:  # shapes the tiling can't cover → oracle
+        return ref.mha_reference(q, k, v, causal=causal, window=window)
+    bq = 128 if S % 128 == 0 else 64
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=bq, bk=bq, interpret=flags.pallas_interpret())
+
+
+def decode_attention(q, k, v, kpos, *, t, window: Optional[int] = None) -> jax.Array:
+    from repro.kernels import decode_attention as da
+    S = k.shape[1]
+    if S % 512 and S % 128:
+        return ref.decode_attention_reference(q, k, v, kpos, t=t, window=window)
+    bk = 512 if S % 512 == 0 else 128
+    return da.decode_attention(q, k, v, kpos, t=t, window=window, bk=bk,
+                               interpret=flags.pallas_interpret())
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6) -> jax.Array:
+    if not flags.use_fused_rmsnorm():
+        return ref.rmsnorm_reference(x, scale, eps=eps)
+    from repro.kernels import rmsnorm as rn
+    return rn.rmsnorm(x, scale, eps=eps, interpret=flags.pallas_interpret())

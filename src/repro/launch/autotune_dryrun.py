@@ -1,0 +1,137 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Paper §5 end-to-end: Bayesian-optimization search over the recipe where
+each trial is a REAL ``lower().compile()`` of the train step on the
+production mesh, scored by the roofline-estimated step time from the compiled
+artifact (the CPU-container analogue of the paper's SLURM-job objective).
+Infeasible trials (mesh non-factorizable, layer indivisible, >2× HBM) are
+penalized exactly like the paper's failed runs.
+
+  PYTHONPATH=src python -m repro.launch.autotune_dryrun --arch granite_3_2b --budget 10
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro import configs as cfg_mod
+from repro.core.autotune import GP, Trial, best_so_far, expected_improvement
+from repro.launch import plans as plans_mod
+from repro.launch import shapes as shapes_mod
+from repro.launch.dryrun import run_cell
+
+import numpy as np
+
+PENALTY = -1.0
+HBM = 16 * 2**30
+
+
+def trial_space():
+    """Recipe knobs searchable on the fixed 256-chip mesh."""
+    out = []
+    for tp in (2, 4, 8):
+        for pp in (1, 2, 4):
+            if tp * pp > 16:
+                continue
+            for remat in ("full", "stage"):
+                if remat == "stage" and pp == 1:
+                    continue
+                for gather in (False, True):
+                    out.append({"tp": tp, "pp": pp, "remat": remat,
+                                "gather": gather})
+    return out
+
+
+def encode(c):
+    return np.array([np.log2(c["tp"]) / 3, np.log2(c["pp"]) / 2,
+                     1.0 if c["remat"] == "stage" else 0.0,
+                     1.0 if c["gather"] else 0.0])
+
+
+def make_objective(arch: str, shape_name: str, out_dir: Path):
+    cfg = cfg_mod.get_config(arch)
+
+    def objective(c):
+        # steer the per-arch plan table for this trial
+        old = plans_mod.TRAIN_PLAN[arch]
+        zero = old[2]
+        if cfg.n_layers % c["pp"]:
+            return PENALTY, True
+        plans_mod.TRAIN_PLAN[arch] = (c["tp"], c["pp"], zero)
+        try:
+            rec = run_cell(arch, shape_name, multi_pod=False, out_dir=out_dir,
+                           verbose=False, remat=c["remat"], gather_once=c["gather"],
+                           tag=f"bo-tp{c['tp']}pp{c['pp']}{c['remat']}{int(c['gather'])}")
+        finally:
+            plans_mod.TRAIN_PLAN[arch] = old
+        if rec["status"] != "ok":
+            return PENALTY, True
+        if rec["memory"]["peak_per_device"] > 2 * HBM:  # hopeless OOM
+            return PENALTY, True
+        import sys
+        sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+        from benchmarks.roofline import roofline_terms
+        r = roofline_terms(rec)
+        t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        # objective: useful model TFLOP/s per device at the roofline bound
+        tflops = r["model_flops"] / rec["devices"] / t_bound / 1e12
+        return tflops, False
+
+    return objective
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--out", default="results/bo_dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cands = trial_space()
+    X_all = np.stack([encode(c) for c in cands])
+    rng = np.random.default_rng(0)
+    order = rng.permutation(len(cands))
+    objective = make_objective(args.arch, args.shape, out_dir)
+
+    trials, tried = [], set()
+
+    def run(i):
+        c = cands[i]
+        t0 = time.time()
+        val, failed = objective(c)
+        print(f"[bo] {c} → {'FAIL' if failed else f'{val:.1f} TF/s/dev'} "
+              f"({time.time()-t0:.0f}s)")
+        trials.append(Trial(config=c, value=PENALTY if failed else val,
+                            failed=failed))
+        tried.add(i)
+
+    n_init = min(4, args.budget)
+    for i in order[:n_init]:
+        run(int(i))
+    while len(trials) < args.budget and len(tried) < len(cands):
+        X = np.stack([encode(t.config) for t in trials])
+        y = np.array([t.value for t in trials])
+        gp = GP()
+        gp.fit(X, y)
+        mu, sig = gp.predict(X_all)
+        ei = expected_improvement(mu, sig, max(y))
+        ei[list(tried)] = -np.inf
+        run(int(np.argmax(ei)))
+
+    ok = [t for t in trials if not t.failed]
+    best = max(ok, key=lambda t: t.value) if ok else None
+    print(f"[bo] best: {best.config} → {best.value:.1f} TF/s/dev "
+          f"(trajectory: {[round(v,1) for v in best_so_far(trials)]})")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / f"{args.arch}_{args.shape}_bo.json", "w") as f:
+        json.dump({"trials": [dataclasses.asdict(t) for t in trials],
+                   "best": dataclasses.asdict(best) if best else None}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh (single-pod 16×16 and multi-pod 2×16×16), print
+``memory_analysis()`` / ``cost_analysis()``, parse collective bytes from the
+compiled HLO, and persist one JSON per cell for the roofline table.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_mod
+from repro.core import stepfn
+from repro.core.cost_model import active_params, model_flops_per_token
+from repro.core.recipe import ParallelismConfig
+from repro.launch import plans as plans_mod
+from repro.launch import shapes as shapes_mod
+from repro.launch.hlo_analysis import analyze_module, collective_bytes
+from repro.launch.mesh import make_production_mesh, make_recipe_mesh
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+
+
+def _train_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape):
+    """(lowered, aux-info) for a train_step cell."""
+    tcfg = stepfn.TrainConfig()
+    state_shapes = jax.eval_shape(
+        lambda key: stepfn.init_state(cfg, plan, key, tcfg), jax.random.PRNGKey(0))
+    state_sh = stepfn.state_shardings(cfg, state_shapes, mesh, plan)
+    batch_specs = shapes_mod.train_input_specs(cfg, shape)
+    batch_sh = stepfn.batch_shardings(batch_specs, mesh)
+    step = stepfn.make_train_step(cfg, plan, tcfg, mesh)
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    lowered = jitted.lower(state_shapes, batch_specs)
+    tokens = shape.global_batch * shape.seq_len
+    useful = model_flops_per_token(cfg, shape.seq_len) * tokens
+    return lowered, {"model_flops": useful}
+
+
+def _serve_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape,
+                     *, prefill_last_only: bool = False):
+    """(lowered, aux) for serve_step (decode) or prefill cells."""
+    B = shape.global_batch
+    dt = cfg.compute_dtype
+
+    def serve_params(key):
+        p = model_api.init_params(cfg, key)
+        return jax.tree_util.tree_map(lambda x: x.astype(dt), p)
+
+    params_shapes = jax.eval_shape(serve_params, jax.random.PRNGKey(0))
+    params_sh = plans_mod.serve_param_sharding(params_shapes, mesh)
+
+    if shape.kind == "prefill":
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+        if cfg.family == "vlm":
+            batch_specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            batch_specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.float32)
+        batch_sh = stepfn.batch_shardings(batch_specs, mesh)
+        fn = stepfn.make_prefill(cfg, plan, mesh, last_only=prefill_last_only)
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        lowered = jitted.lower(params_shapes, batch_specs)
+        useful = 2.0 * active_params(cfg) * B * shape.seq_len
+        return lowered, {"model_flops": useful}
+
+    # decode: one token against a KV/state cache of seq_len
+    def mk_cache(params):
+        batch = None
+        if cfg.family == "encdec":
+            batch = {"frames": jnp.zeros((B, cfg.enc_frames, cfg.d_model), jnp.float32)}
+        return model_api.init_cache(cfg, params, B, shape.seq_len, batch)
+
+    cache_shapes = jax.eval_shape(mk_cache, params_shapes)
+    cache_sh = plans_mod.cache_shardings(cache_shapes, mesh,
+                                         global_batch=B, cache_len=shape.seq_len)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec(
+        plans_mod.batch_sharding(mesh, B)))
+    fn = stepfn.make_serve_step(cfg, plan, mesh)
+    jitted = jax.jit(fn, in_shardings=(params_sh, tok_sh, None, cache_sh),
+                     out_shardings=(tok_sh, cache_sh), donate_argnums=(3,))
+    lowered = jitted.lower(params_shapes, tok, t, cache_shapes)
+    useful = 2.0 * active_params(cfg) * B
+    return lowered, {"model_flops": useful}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             verbose: bool = True, sp: bool = False, moe: str = "einsum",
+             prefill_last_only: bool = False, remat: str = None,
+             gather_once: bool = False, tag: str = "") -> dict:
+    cfg = cfg_mod.get_config(arch)
+    shape = shapes_mod.SHAPES[shape_name]
+    ok, why = shapes_mod.applicable(cfg, shape)
+    mesh_tag = ("multipod" if multi_pod else "pod") + (f"-{tag}" if tag else "")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "status": "skip", "reason": why,
+           "variant": {"sp": sp, "moe": moe,
+                       "prefill_last_only": prefill_last_only, "remat": remat}}
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name}: SKIP ({why})")
+        return rec
+
+    plan = plans_mod.make_plan(arch, cfg, shape, multi_pod=multi_pod)
+    if sp:
+        plan = dataclasses.replace(plan, sequence_parallel=True)
+    if remat:
+        plan = dataclasses.replace(plan, remat_policy=remat)
+    if gather_once:
+        plan = dataclasses.replace(plan, gather_params_once=True)
+    if plan.pp > 1 or plan.tp != 16:
+        mesh = make_recipe_mesh(pp=plan.pp, tp=plan.tp, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+    from repro.models.moe import moe_impl
+    t0 = time.time()
+    try:
+        with mesh, moe_impl(moe):
+            if shape.kind == "train":
+                lowered, aux = _train_artifacts(cfg, plan, mesh, shape)
+            else:
+                lowered, aux = _serve_artifacts(
+                    cfg, plan, mesh, shape, prefill_last_only=prefill_last_only)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)          # body-once (raw) counts
+        walk = analyze_module(hlo)            # trip-count-weighted totals
+        t1 = time.time()
+        rec.update({
+            "status": "ok",
+            "plan": {"tp": plan.tp, "pp": plan.pp, "dp": plan.dp,
+                     "pods": plan.pods, "mbs": plan.mbs, "gas": plan.gas,
+                     "zero": plan.zero_stage},
+            "devices": mesh.devices.size,
+            "compile_s": round(t1 - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            "cost_raw": {"flops_per_device": cost.get("flops", 0.0),
+                         "bytes_per_device": cost.get("bytes accessed", 0.0)},
+            # trip-count-weighted per-device totals (see hlo_analysis.py)
+            "hlo": {
+                "flops_per_device": walk["flops"],
+                "bytes_per_device": walk["bytes"],
+                "collective_bytes_per_device": walk["collective_total"],
+                "collectives": {k: walk[k] for k in
+                                ("all-reduce", "all-gather", "reduce-scatter",
+                                 "all-to-all", "collective-permute")},
+            },
+            "collectives_raw": coll,
+            "model_flops": aux["model_flops"],
+        })
+        if verbose:
+            m = rec["memory"]
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_tag}: OK "
+                  f"({rec['compile_s']}s) peak/dev="
+                  f"{m['peak_per_device']/2**30:.2f}GiB "
+                  f"flops/dev={walk['flops']:.3g} "
+                  f"coll/dev={walk['collective_total']/2**20:.1f}MiB")
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_tag}: FAIL {e}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / f"{arch}__{shape_name}__{mesh_tag}.json", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--sp", action="store_true", help="sequence parallelism")
+    ap.add_argument("--moe-impl", default="einsum", choices=["einsum", "sort"])
+    ap.add_argument("--prefill-last-only", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full", "stage"])
+    ap.add_argument("--gather-once", action="store_true")
+    ap.add_argument("--serve-tp", type=int, default=None,
+                    help="override serving TP degree (head-aligned hillclimb)")
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    if args.serve_tp:
+        from repro.launch import plans as _plans
+        for a in cfg_mod.ARCH_IDS:
+            _plans.SERVE_TP[a] = args.serve_tp
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    if args.all:
+        pairs = shapes_mod.cells({a: cfg_mod.get_config(a) for a in cfg_mod.ASSIGNED})
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+    for arch, shape in pairs:
+        for mp in meshes:
+            results.append(run_cell(
+                arch, shape, multi_pod=mp, out_dir=out_dir, sp=args.sp,
+                moe=args.moe_impl, prefill_last_only=args.prefill_last_only,
+                remat=args.remat, gather_once=args.gather_once, tag=args.tag))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"of {len(results)} cells")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,261 @@
+"""Compiled-HLO analysis: trip-count-aware FLOP / byte / collective accounting.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified on this
+container), so any scan-over-layers model is undercounted by ~L×.  This module
+re-walks the HLO call graph from ENTRY, multiplying each computation's costs
+by the product of enclosing ``known_trip_count`` attributes:
+
+  * FLOPs: dot ops (2·prod(out)·K, K from the lhs contracting dims) — the
+    MXU-relevant count;
+  * memory bytes: operand+output bytes of memory-visible ops (fusion internals
+    excluded — they live in registers/VMEM);
+  * collective bytes by kind (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), output-shape convention.
+
+Shapes in SPMD HLO are per-partition, so all sums are *per device*.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective kind (output-shape convention)."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line and any(c in line for c in COLLECTIVES):
+            continue  # avoid double counting async start/done pairs
+        m = _OPLINE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """while-loop trip counts (sanity: pipeline supersteps, layer scans)."""
+    out = {}
+    for m in re.finditer(r'trip_count[=:](\d+)', hlo_text):
+        k = f"trip_{m.group(1)}"
+        out[k] = out.get(k, 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware module walk
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_PARAM_DECL = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^()]*\))|(?:[\w\[\],{}]+))")
+_OP_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)')
+_CALLED = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+# ops that move no HBM bytes of their own
+_MEM_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "iota", "after-all", "partition-id",
+    "replica-id",
+}
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.param_shapes: Dict[str, str] = {}
+        self.ops: List[dict] = []
+
+
+def _parse_module(hlo: str) -> Tuple[Dict[str, "_Comp"], Optional[str], Dict[str, str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    shapes: Dict[str, str] = {}          # op/param name -> shape string
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: "[ENTRY] %name (params...) -> ret {"
+        # (op lines contain " = "; /*index=N*/ comments don't have spaced =)
+        if stripped.endswith("{") and " -> " in stripped and " = " not in stripped.split(" -> ")[0]:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                sig = stripped.split(" -> ")[0]
+                for pm in _PARAM_DECL.finditer(sig):
+                    shapes[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_DEF.match(line)
+        if not om:
+            continue
+        name, shape_str, opkind = om.group(1), om.group(2), om.group(3)
+        shapes[name] = shape_str
+        op = {"name": name, "shape": shape_str, "kind": opkind, "line": line}
+        tm = _TRIP.search(line)
+        if tm:
+            op["trip"] = int(tm.group(1))
+        cm = _CALLED.search(line)
+        if cm:
+            op["called"] = cm.group(1)
+        op["operands"] = _operand_names(line)
+        cur.ops.append(op)
+    return comps, entry, shapes
+
+
+def _operand_names(line: str) -> List[str]:
+    # operands are inside the first (...) after the op kind
+    m = re.search(r"[\w\-]+\(([^)]*)\)", line.split("=", 1)[-1])
+    if not m:
+        return []
+    out = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok[1:])
+    return out
+
+
+def _dot_flops(line: str, shape_str: str, shapes: Dict[str, str],
+               operands: List[str]) -> float:
+    out_elems = _shape_elems(shape_str)
+    k = 1.0
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if cm and operands:
+        lhs_shape = shapes.get(operands[0], "")
+        dims = _shape_dims(lhs_shape)
+        if dims is not None and cm.group(1):
+            for ax in cm.group(1).split(","):
+                ax = int(ax)
+                if ax < len(dims):
+                    k *= dims[ax]
+    return 2.0 * out_elems * k
+
+
+def _shape_dims(shape_str: str) -> Optional[List[int]]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return None
+    if not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _shape_elems(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE.finditer(shape_str):
+        n = 1.0
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def analyze_module(hlo: str) -> Dict[str, float]:
+    """Trip-count-weighted per-device totals for the whole module."""
+    comps, entry, shapes = _parse_module(hlo)
+    totals = {"flops": 0.0, "bytes": 0.0,
+              **{k: 0.0 for k in COLLECTIVES}, "collective_count": 0.0}
+    seen_stack = set()
+
+    def op_bytes(op) -> float:
+        b = _shape_bytes(op["shape"])
+        for o in op.get("operands", []):
+            b += _shape_bytes(shapes.get(o, ""))
+        return b
+
+    def walk(comp_name: str, mult: float, mem_visible: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.add(comp_name)
+        for op in comp.ops:
+            kind = op["kind"]
+            if kind == "dot":
+                totals["flops"] += mult * _dot_flops(op["line"], op["shape"],
+                                                     shapes, op["operands"])
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVES and not kind.endswith("-done"):
+                b = _shape_bytes(op["shape"])
+                # CPU XLA promotes bf16 all-reduces to f32 ("..._promoted"
+                # reducers); TPU runs them natively in bf16 — count as such.
+                if base == "all-reduce" and "promoted" in op["line"]:
+                    b *= 0.5
+                totals[base] += mult * b
+                totals["collective_count"] += mult
+            if kind == "while":
+                trip = op.get("trip", 1)
+                body = op.get("called")
+                if body:
+                    walk(body, mult * trip, mem_visible)
+                cm = _COND.search(op["line"])
+                if cm:
+                    walk(cm.group(1), mult * trip, False)
+                if mem_visible:
+                    totals["bytes"] += mult * 0.0  # loop plumbing ~ free
+                continue
+            if kind == "fusion":
+                called = op.get("called")
+                if called:
+                    walk(called, mult, False)     # flops inside, bytes at boundary
+                if mem_visible:
+                    totals["bytes"] += mult * op_bytes(op)
+                continue
+            if kind in ("call", "conditional", "custom-call", "async-start"):
+                called = op.get("called")
+                if called:
+                    walk(called, mult, mem_visible)
+            if mem_visible and kind not in _MEM_FREE:
+                totals["bytes"] += mult * op_bytes(op)
+        seen_stack.discard(comp_name)
+
+    if entry:
+        walk(entry, 1.0, True)
+    totals["collective_total"] = sum(totals[k] for k in COLLECTIVES)
+    return totals

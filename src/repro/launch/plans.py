@@ -1,0 +1,145 @@
+"""Per-(arch × shape) parallelism plans — the recipe applied to each cell.
+
+Training plans follow the paper's checklist: TP confined to the fast ICI
+domain and sized to the arch's head/FFN divisibility, PP for the deep stacks,
+leftover capacity to (ZeRO-)DP.  Serving shapes use TP=16 + batch-DP (PP buys
+nothing at decode).  ZeRO-3 (FSDP) kicks in when the model-parallel shard of
+train state would not fit 16 GB HBM.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.recipe import ParallelismConfig
+from repro.launch.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+# (tp, pp, zero_stage) for train_4k on one pod (data=16, model=16 → pp·tp ≤ 16,
+# leftover model capacity folds into dp).
+TRAIN_PLAN: Dict[str, Tuple[int, int, int]] = {
+    "internvl2_1b":     (2, 1, 1),
+    "xlstm_125m":       (2, 1, 1),
+    "h2o_danube_3_4b":  (8, 2, 1),
+    "qwen15_32b":       (8, 2, 3),
+    "granite_3_2b":     (8, 2, 1),
+    "phi3_mini_38b":    (8, 2, 1),
+    "olmoe_1b_7b":      (8, 2, 1),
+    "deepseek_moe_16b": (16, 1, 3),   # 27 scanned layers — indivisible by pp
+    "whisper_base":     (2, 1, 1),
+    "hymba_15b":        (4, 2, 1),
+    "gpt_36b":          (8, 1, 1),
+    "gpt_20b":          (8, 2, 3),
+    "gpt_175b":         (8, 16, 3),   # the paper's Table-2 best (PP16, TP8)
+}
+
+
+# serving TP degree — head-aligned (beyond-paper hillclimb B2: a TP degree
+# that does not divide n_heads forces GSPMD to redistribute activations at
+# every layer, which dominated the qwen prefill collective term).
+SERVE_TP: Dict[str, int] = {}
+
+
+def make_plan(arch: str, cfg: ModelConfig, shape: ShapeSpec, *,
+              multi_pod: bool = False) -> ParallelismConfig:
+    pods = 2 if multi_pod else 1
+    if shape.kind == "train":
+        tp, pp, zero = TRAIN_PLAN[arch]
+        fold = 16 // (tp * pp)
+        dp = 16 * fold
+        per_replica = shape.global_batch // (dp * pods)
+        assert per_replica >= 1, (arch, shape.name, dp, pods)
+        gas = per_replica  # mbs=1 micro-batches (recipe: keep the pipeline full)
+        return ParallelismConfig(tp=tp, pp=pp, dp=dp, pods=pods, mbs=1,
+                                 gas=gas, zero_stage=zero)
+    # serving: TP on the inner mesh axis, batch over (pod, data) + folded rest
+    tp = SERVE_TP.get(arch, 16)
+    dp = 16 * (16 // tp)
+    return ParallelismConfig(tp=tp, pp=1, dp=dp, pods=pods, mbs=1, gas=1,
+                             zero_stage=0)
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for serving caches / batches
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_sharding(mesh: Mesh, batch_dim_size: int):
+    axes = _dp_axes(mesh)
+    ways = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_dim_size % ways == 0 and batch_dim_size >= ways:
+        ax = axes if len(axes) > 1 else axes[0]
+        return ax
+    return None
+
+
+def cache_shardings(caches_shape_tree, mesh: Mesh, *, global_batch: int,
+                    cache_len: int):
+    """Heuristic per-leaf sharding for decode caches:
+       batch dim → (pod, data); long cache-S dim → data when batch=1;
+       head or head-dim → tp when divisible (the TP KV shard)."""
+    dp_ax = _dp_axes(mesh)
+    dp_ways = int(np.prod([mesh.shape[a] for a in dp_ax]))
+    tp_ways = mesh.shape.get("model", mesh.shape.get("tp", 1))
+    tp_name = "model" if "model" in mesh.axis_names else "tp"
+
+    def one(leaf):
+        shape = leaf.shape
+        parts: list = [None] * len(shape)
+        used_dp = used_tp = False
+        for i, d in enumerate(shape):
+            if not used_dp and d == global_batch and d % dp_ways == 0 and d >= dp_ways:
+                parts[i] = dp_ax if len(dp_ax) > 1 else dp_ax[0]
+                used_dp = True
+                break
+        if not used_dp and global_batch == 1:
+            # shard the long cache sequence dim instead (context-parallel decode)
+            for i, d in enumerate(shape):
+                if d == cache_len and d % dp_ways == 0:
+                    parts[i] = dp_ax if len(dp_ax) > 1 else dp_ax[0]
+                    used_dp = True
+                    break
+        # tp shard: prefer the cache sequence dim (context-parallel decode —
+        # the attention softmax reduces over it with cheap partial collectives,
+        # whereas head/feature sharding forces GSPMD to re-lay-out the cache);
+        # fall back to a trailing head/feature dim.
+        for i, d in enumerate(shape):
+            if parts[i] is None and d == cache_len and d % tp_ways == 0:
+                parts[i] = tp_name
+                used_tp = True
+                break
+        if not used_tp:
+            for i in range(len(shape) - 1, -1, -1):
+                if parts[i] is None and shape[i] % tp_ways == 0 and shape[i] >= tp_ways \
+                        and shape[i] not in (global_batch,):
+                    parts[i] = tp_name
+                    used_tp = True
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(one, caches_shape_tree)
+
+
+def serve_param_sharding(params_shape_tree, mesh: Mesh):
+    """Serving params: shard the biggest dim over tp (memory-first heuristic)."""
+    tp_name = "model" if "model" in mesh.axis_names else "tp"
+    tp_ways = mesh.shape[tp_name]
+
+    def one(leaf):
+        shape = leaf.shape
+        parts = [None] * len(shape)
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % tp_ways == 0 and shape[i] >= tp_ways:
+                parts[i] = tp_name
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(one, params_shape_tree)

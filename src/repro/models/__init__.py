@@ -1,0 +1,14 @@
+"""Model zoo: composable JAX model definitions for all assigned architectures.
+
+Pure-functional: ``init_params(cfg, key)`` builds a pytree of fp32 master
+params; ``loss_fn`` / ``serve_step`` consume a compute-dtype cast of it.
+"""
+
+from repro.models.api import (  # noqa: F401
+    build_model,
+    init_params,
+    loss_fn,
+    forward,
+    init_cache,
+    decode_step,
+)

@@ -1,0 +1,84 @@
+"""Unified model API: one entry point per lifecycle stage, dispatched on family.
+
+``init_params``  → fp32 master parameter pytree
+``loss_fn``      → (loss, metrics) for a training batch
+``forward``      → logits for a full sequence (prefill)
+``init_cache``   → decode caches (KV rings / SSM states / cross-KV)
+``decode_step``  → one-token autoregressive step
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    if cfg.family == "encdec":
+        return encdec.encdec_init(key, cfg)
+    return transformer.lm_init(key, cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            *, remat_policy: str = "full"):
+    if cfg.family == "encdec":
+        return encdec.encdec_loss(cfg, params, batch, remat_policy=remat_policy)
+    return transformer.lm_loss(cfg, params, batch, remat_policy=remat_policy)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            *, remat_policy: str = "none", last_only: bool = False):
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params, batch["frames"], remat_policy=remat_policy)
+        logits = encdec.decode_train(cfg, params, enc_out, batch["tokens"],
+                                     remat_policy=remat_policy)
+        return logits[:, -1:] if last_only else logits
+    logits, _ = transformer.lm_forward(cfg, params, batch,
+                                       remat_policy=remat_policy,
+                                       last_only=last_only)
+    return logits
+
+
+def init_cache(cfg: ModelConfig, params, batch_size: int, max_len: int,
+               batch: Dict[str, jax.Array] | None = None):
+    if cfg.family == "encdec":
+        assert batch is not None and "frames" in batch
+        return encdec.encdec_cache_init(cfg, params, batch["frames"], max_len)
+    return transformer.lm_cache_init(cfg, batch_size, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, t: jax.Array, caches):
+    if cfg.family == "encdec":
+        return encdec.encdec_decode_step(cfg, params, token, t, caches)
+    return transformer.lm_decode_step(cfg, params, token, t, caches)
+
+
+class Model:
+    """Convenience OO wrapper used by examples and the serving loop."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(self.cfg, params, batch, **kw)
+
+    def forward(self, params, batch, **kw):
+        return forward(self.cfg, params, batch, **kw)
+
+    def init_cache(self, params, batch_size, max_len, batch=None):
+        return init_cache(self.cfg, params, batch_size, max_len, batch)
+
+    def decode_step(self, params, token, t, caches):
+        return decode_step(self.cfg, params, token, t, caches)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,245 @@
+"""Multi-head attention: GQA, causal / sliding-window / bidirectional masks,
+RoPE, ring-buffer KV caches for sub-quadratic long-context decode.
+
+The einsum path here is the paper-faithful ("out-of-the-box XLA") baseline.
+``repro.kernels.ops`` provides the Pallas flash-attention fast path; model code
+routes through :func:`sdpa`, which dispatches on ``repro.runtime.flags``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def attention_init(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    q_dim, kv_dim = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p: Params = {
+        "wq": layers.dense_init(kq, d, q_dim),
+        "wk": layers.dense_init(kk, d, kv_dim),
+        "wv": layers.dense_init(kv, d, kv_dim),
+        "wo": layers.dense_init(ko, q_dim, d, scale=1.0 / (q_dim ** 0.5 * (2 * cfg.n_layers) ** 0.5)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((kv_dim,), jnp.float32)
+    return p
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+               window: Optional[int], k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(..., Sq, Sk) additive fp32 bias. q_pos/k_pos are absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+CHUNKED_THRESHOLD = 32 * 1024 * 1024  # Sq·Sk elements above which we go chunked
+
+
+def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                 window, bq: int = 512, bk: int = 1024) -> jax.Array:
+    """Online-softmax attention in pure jnp (flash attention expressed as a
+    rolled ``lax.map``/``lax.scan`` nest): O(Sq·bk) memory instead of O(Sq·Sk),
+    which is what lets the 32k-prefill shapes compile without materializing
+    the S² score tensor.  ``window`` may be a traced scalar (Hymba's per-layer
+    global/SWA mix)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qf.shape[1] // bq, kf.shape[1] // bk
+    qb = jnp.moveaxis(qf.reshape(B, nq, bq, Hkv, g, D), 1, 0)      # (nq,B,bq,Hkv,g,D)
+    kb = jnp.moveaxis(kf.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(vf.reshape(B, nk, bk, Hkv, D), 1, 0)
+
+    def one_q(args):
+        iq, qblk = args                                            # qblk (B,bq,Hkv,g,D)
+        qpos = iq * bq + jnp.arange(bq)
+
+        def one_k(carry, kin):
+            ik, kblk, vblk = kin
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)        # (B,Hkv,g,bq,bk)
+            kpos = ik * bk + jnp.arange(bk)
+            ok = (kpos[None, :] < Sk)
+            if causal:
+                ok = ok & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                ok = ok & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(ok[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * ok[None, None, None]
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(one_k, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,Hkv,g,bq,D)
+        return jnp.moveaxis(out, 3, 1)                             # (B,bq,Hkv,g,D)
+
+    outs = jax.lax.map(one_q, (jnp.arange(nq), qb))                # (nq,B,bq,...)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * bq, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
+         *, causal: bool, window=None) -> jax.Array:
+    """Scaled dot-product attention with GQA. q:(B,Sq,Hq,D) k/v:(B,Sk,Hkv,D).
+
+    Dispatch: Pallas flash kernel (TPU fast path, when enabled) → chunked
+    online-softmax (large S, no S² materialization) → einsum oracle.
+    """
+    from repro.runtime import flags
+    if flags.use_flash_attention() and bias is None and isinstance(window, (int, type(None))):
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+    if bias is None and q.shape[1] * k.shape[1] > CHUNKED_THRESHOLD:
+        return chunked_sdpa(q, k, v, causal=causal, window=window)
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if bias is not None:
+        scores = scores + bias[:, None, None, :, :]
+    elif causal or window is not None:
+        # aligned self-attention positions (the flash path's mask semantics)
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        ok = (kpos <= qpos) if causal else jnp.ones((Sq, Sk), bool)
+        if window is not None:
+            ok &= kpos > qpos - window
+        scores = jnp.where(ok[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                    *, causal: bool = True, window: Optional[int] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    src = x if kv_source is None else kv_source
+    k = src @ p["wk"].astype(dt)
+    v = src @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    Sk = src.shape[1]
+    k = k.reshape(B, Sk, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Sk, cfg.n_kv_heads, hd)
+    kp = kv_positions if kv_positions is not None else positions
+    if cfg.pos_embed == "rope" and kv_source is None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, kp, cfg.rope_theta)
+    if kv_source is None:
+        # self-attention: positions are aligned aranges at every call site, so
+        # the mask is synthesized inside sdpa — never a (B, Sq, Sk) bias.
+        out = sdpa(q, k, v, None, causal=causal, window=window)
+    else:
+        out = sdpa(q, k, v, None, causal=False, window=None)  # full cross-attn
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return out @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# decode path (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, *, window: Optional[int],
+               dtype=None) -> Dict[str, jax.Array]:
+    """Ring-buffer KV cache. For sliding-window layers the buffer is only
+    ``window`` wide — this is what makes ``long_500k`` decode O(window)."""
+    size = max_len if window is None else min(window, max_len)
+    dt = dtype or cfg.compute_dtype
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((batch, size), jnp.int32) - 1,  # -1 = invalid slot
+    }
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
+                     cache: Dict[str, jax.Array], *, window: Optional[int] = None,
+                     cross: bool = False):
+    """x: (B, 1, d); t: scalar absolute position. Returns (out, new_cache)."""
+    B, _, d = x.shape
+    hd, dt = cfg.hd, x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(1, 1, cfg.n_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, jnp.full((B, 1), t, jnp.int32), cfg.rope_theta)
+    if cross:
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+    else:
+        knew = x @ p["wk"].astype(dt)
+        vnew = x @ p["wv"].astype(dt)
+        if "bk" in p:
+            knew, vnew = knew + p["bk"].astype(dt), vnew + p["bv"].astype(dt)
+        knew = knew.reshape(B, 1, cfg.n_kv_heads, hd)
+        vnew = vnew.reshape(B, 1, cfg.n_kv_heads, hd)
+        if cfg.pos_embed == "rope":
+            knew = layers.apply_rope(knew, jnp.full((B, 1), t, jnp.int32), cfg.rope_theta)
+        size = cache["k"].shape[1]
+        slot = jnp.mod(t, size)  # ring-buffer write
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], knew.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vnew.astype(cache["v"].dtype), slot, axis=1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((B, 1), t, jnp.int32), slot, axis=1)
+        new_cache = {"k": k, "v": v, "pos": kpos}
+    from repro.runtime import flags
+    if flags.use_flash_decode() and not cross:
+        from repro.kernels import ops
+        out = ops.decode_attention(q, k.astype(dt), v.astype(dt), kpos,
+                                   t=t, window=window)
+    else:
+        valid = kpos >= 0
+        if window is not None:
+            valid &= kpos > t - window
+        bias = _mask_bias(jnp.full((B, 1), t, jnp.int32), kpos, causal=not cross,
+                          window=None, k_valid=valid)
+        out = sdpa(q, k.astype(dt), v.astype(dt), bias, causal=False, window=None)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"].astype(dt), new_cache

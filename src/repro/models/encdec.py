@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_frames, d) directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import (attention_init, attention_apply,
+                                    attention_decode, cache_init)
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention_init(k1, cfg),
+        "norm2": layers.norm_init(cfg.norm, cfg.d_model),
+        "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    ke, kd, kt, kp1, kp2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    enc = [_enc_block_init(k, cfg) for k in enc_keys]
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    dec = []
+    for k in dec_keys:
+        k1, k2, k3 = jax.random.split(k, 3)
+        dec.append({
+            "norm1": layers.norm_init(cfg.norm, cfg.d_model),
+            "attn": attention_init(k1, cfg),
+            "normx": layers.norm_init(cfg.norm, cfg.d_model),
+            "xattn": attention_init(k2, cfg, cross=True),
+            "norm2": layers.norm_init(cfg.norm, cfg.d_model),
+            "mlp": layers.mlp_init(k3, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp),
+        })
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": layers.embed_init(kt, cfg.vocab_size, cfg.d_model),
+        "enc_pos": jax.random.normal(kp1, (cfg.enc_frames, cfg.d_model), jnp.float32) * 0.02,
+        "dec_pos": jax.random.normal(kp2, (min(cfg.max_position, 32768), cfg.d_model),
+                                     jnp.float32) * 0.02,
+        "enc_blocks": stack(enc),
+        "dec_blocks": stack(dec),
+        "enc_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        "final_norm": layers.norm_init(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           *, remat_policy: str = "full") -> jax.Array:
+    dt = cfg.compute_dtype
+    x = frames.astype(dt) + params["enc_pos"].astype(dt)[None]
+    B, F, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def one(x, bp):
+        h = layers.norm_apply(cfg.norm, bp["norm1"], x)
+        x = x + attention_apply(cfg, bp["attn"], h, positions, causal=False)
+        h = layers.norm_apply(cfg.norm, bp["norm2"], x)
+        return x + layers.mlp_apply(bp["mlp"], h, gated=cfg.gated_mlp, act=cfg.act), None
+
+    body = one if remat_policy == "none" else jax.checkpoint(
+        one, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def decode_train(cfg: ModelConfig, params: Params, enc_out: jax.Array,
+                 tokens: jax.Array, *, remat_policy: str = "full") -> jax.Array:
+    dt = cfg.compute_dtype
+    B, S = tokens.shape
+    x = layers.embed_lookup(params["embed"], tokens, dt)
+    x = x + params["dec_pos"][:S].astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    F = enc_out.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def one(x, bp):
+        h = layers.norm_apply(cfg.norm, bp["norm1"], x)
+        x = x + attention_apply(cfg, bp["attn"], h, positions, causal=True)
+        h = layers.norm_apply(cfg.norm, bp["normx"], x)
+        x = x + attention_apply(cfg, bp["xattn"], h, positions, causal=False,
+                                kv_source=enc_out, kv_positions=enc_pos)
+        h = layers.norm_apply(cfg.norm, bp["norm2"], x)
+        return x + layers.mlp_apply(bp["mlp"], h, gated=cfg.gated_mlp, act=cfg.act), None
+
+    body = one if remat_policy == "none" else jax.checkpoint(
+        one, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    return layers.unembed(params["embed"], x)
+
+
+def encdec_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+                *, remat_policy: str = "full"):
+    enc_out = encode(cfg, params, batch["frames"], remat_policy=remat_policy)
+    logits = decode_train(cfg, params, enc_out, batch["tokens"], remat_policy=remat_policy)
+    xent = layers.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return xent, {"xent": xent, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# decode path: self-attn ring caches + precomputed cross-attn KV
+# ---------------------------------------------------------------------------
+
+def encdec_cache_init(cfg: ModelConfig, params: Params, frames: jax.Array, max_len: int):
+    """Run the encoder once, precompute cross-attention K/V per layer."""
+    enc_out = encode(cfg, params, frames, remat_policy="none")
+    B = frames.shape[0]
+    dt = cfg.compute_dtype
+    F = enc_out.shape[1]
+
+    def xkv(bp):
+        k = (enc_out @ bp["xattn"]["wk"].astype(dt)).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+        v = (enc_out @ bp["xattn"]["wv"].astype(dt)).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+        pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+        return {"k": k, "v": v, "pos": pos}
+
+    cross = []
+    L = cfg.n_layers
+    for i in range(L):
+        bp = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+        cross.append(xkv(bp))
+    cross = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cross)
+    self_cache = {
+        "k": jnp.zeros((L, B, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((L, B, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((L, B, max_len), jnp.int32) - 1,
+    }
+    return {"cross": cross, "self": self_cache}
+
+
+def encdec_decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                       t: jax.Array, caches):
+    dt = cfg.compute_dtype
+    x = layers.embed_lookup(params["embed"], token[:, None], dt)
+    maxp = params["dec_pos"].shape[0]
+    x = x + params["dec_pos"][jnp.minimum(t, maxp - 1)].astype(dt)[None, None]
+
+    def step(x, layer_in):
+        bp, self_c, cross_c = layer_in
+        h = layers.norm_apply(cfg.norm, bp["norm1"], x)
+        h, self_c = attention_decode(cfg, bp["attn"], h, t, self_c, window=None)
+        x = x + h
+        h = layers.norm_apply(cfg.norm, bp["normx"], x)
+        h, _ = attention_decode(cfg, bp["xattn"], h, t, cross_c, cross=True)
+        x = x + h
+        h = layers.norm_apply(cfg.norm, bp["norm2"], x)
+        x = x + layers.mlp_apply(bp["mlp"], h, gated=cfg.gated_mlp, act=cfg.act)
+        return x, self_c
+
+    x, new_self = jax.lax.scan(step, x, (params["dec_blocks"], caches["self"], caches["cross"]))
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = layers.unembed(params["embed"], x)[:, 0]
+    return logits, {"cross": caches["cross"], "self": new_self}

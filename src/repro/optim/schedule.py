@@ -1,0 +1,14 @@
+"""LR schedules: linear warmup + cosine decay (the GPT-3/Megatron default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, peak: float = 3e-4, warmup: int = 200,
+                total: int = 10000, floor_frac: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+    t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,56 @@
+"""Process-wide dispatch flags.
+
+The paper's recipe is explicitly "out-of-the-box" (no custom kernels) — that is
+the default, paper-faithful configuration.  The Pallas kernels are the
+beyond-paper optimization layer and are opt-in per process (the dry-run and
+perf benchmarks flip them on for the TPU target).
+"""
+
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_FLAGS = {
+    "flash_attention": os.environ.get("REPRO_FLASH_ATTENTION", "0") == "1",
+    "flash_decode": os.environ.get("REPRO_FLASH_DECODE", "0") == "1",
+    "fused_rmsnorm": os.environ.get("REPRO_FUSED_RMSNORM", "0") == "1",
+    "pallas_interpret": os.environ.get("REPRO_PALLAS_INTERPRET", "auto"),
+}
+
+
+def use_flash_attention() -> bool:
+    return bool(_FLAGS["flash_attention"])
+
+
+def use_flash_decode() -> bool:
+    return bool(_FLAGS["flash_decode"])
+
+
+def use_fused_rmsnorm() -> bool:
+    return bool(_FLAGS["fused_rmsnorm"])
+
+
+def pallas_interpret() -> bool:
+    """interpret=True on CPU (validation), False on real TPU."""
+    mode = _FLAGS["pallas_interpret"]
+    if mode == "auto":
+        import jax
+        return jax.default_backend() == "cpu"
+    return mode == "1"
+
+
+def set_flag(name: str, value) -> None:
+    if name not in _FLAGS:
+        raise KeyError(name)
+    _FLAGS[name] = value
+
+
+@contextmanager
+def flag_ctx(**kv):
+    old = {k: _FLAGS[k] for k in kv}
+    _FLAGS.update(kv)
+    try:
+        yield
+    finally:
+        _FLAGS.update(old)

@@ -1,0 +1,14 @@
+import os
+import sys
+from pathlib import Path
+
+# src-layout import without install
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see ONE device.
+# Multi-device distribution tests spawn subprocesses with their own flags
+# (tests/test_distributed.py).
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,142 @@
+"""Validation of EXPERIMENTS.md against the paper's own claims (C1-C6 in
+DESIGN.md), using the SMNG-P2 hardware profile the paper measured on."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import memory
+from repro.core.autotune import SearchSpace, bayesian_search, best_so_far
+from repro.core.cost_model import estimate_step
+from repro.core.recipe import ParallelismConfig, RecipeAdvisor
+from repro.core.systems import SMNG_P2
+
+
+# --- C1: Table 1 memory model ------------------------------------------------
+
+def test_table1_memory_exact():
+    t = memory.table1()
+    # paper numbers (GB): params 6x, grads 2x, optimizer 8x
+    assert t["3.6B"]["params_GB"] == pytest.approx(21.6, rel=1e-6)
+    assert t["3.6B"]["grads_GB"] == pytest.approx(7.2, rel=1e-6)
+    assert t["3.6B"]["optimizer_GB"] == pytest.approx(28.8, rel=1e-6)
+    assert t["3.6B"]["total_GB"] == pytest.approx(57.6, rel=1e-6)
+    assert t["20B"]["total_GB"] == pytest.approx(320.0, rel=1e-6)
+    assert t["175B"]["total_GB"] == pytest.approx(2800.0, rel=1e-6)
+
+
+# --- C2: Fig 1 — TP cliff at the node boundary --------------------------------
+
+def test_fig1_tp_cliff():
+    cfg = get_config("gpt_36b")
+    tput = {}
+    for tp in (4, 8, 16):
+        plan = ParallelismConfig(tp=tp, pp=1, dp=1, mbs=2, gas=8)
+        tput[tp] = estimate_step(cfg, plan, system=SMNG_P2).model_tflops_per_device
+    # within the node: mild variation; crossing it: sharp drop (paper Fig 1)
+    assert tput[8] > 0.5 * tput[4]
+    assert tput[16] < 0.6 * tput[8], f"no cliff: {tput}"
+
+
+# --- C3: Figs 2/3 — the PP/M bubble law ---------------------------------------
+
+def test_fig2_microbatch_amortization():
+    cfg = get_config("gpt_20b")
+    tputs = [estimate_step(cfg, ParallelismConfig(tp=8, pp=8, dp=1, mbs=1, gas=g),
+                           system=SMNG_P2).model_tflops_per_device
+             for g in (8, 16, 32, 64, 128)]
+    assert all(b >= a * 0.999 for a, b in zip(tputs, tputs[1:])), tputs
+    # diminishing returns: the last doubling gains less than the first
+    gain_first = tputs[1] / tputs[0]
+    gain_last = tputs[-1] / tputs[-2]
+    assert gain_last < gain_first
+
+
+def test_fig3_pp_at_fixed_m_decreases():
+    cfg = get_config("gpt_20b")
+    tputs = [estimate_step(cfg, ParallelismConfig(tp=8, pp=pp, dp=1, mbs=1, gas=32),
+                           system=SMNG_P2).model_tflops_per_device
+             for pp in (4, 8, 16)]
+    assert tputs[0] > tputs[1] > tputs[2], tputs
+
+
+def test_fig3_constant_pp_over_m_stable():
+    cfg = get_config("gpt_20b")
+    tputs = [estimate_step(cfg, ParallelismConfig(tp=8, pp=pp, dp=1, mbs=1,
+                                                  gas=4 * pp),
+                           system=SMNG_P2).model_tflops_per_device
+             for pp in (4, 8, 16)]
+    spread = (max(tputs) - min(tputs)) / max(tputs)
+    assert spread < 0.15, f"PP/M-constant should be ~stable: {tputs}"
+
+
+# --- C4: Table 2 / Fig 4 — BO search ------------------------------------------
+
+def _objective_175b(c):
+    cfg = get_config("gpt_175b")
+    plan = ParallelismConfig(tp=c["tp"], pp=c["pp"], dp=1, mbs=c["mbs"],
+                             gas=c["gas"], zero_stage=1)
+    if cfg.n_layers % plan.pp:
+        return 0.0, True
+    cost = estimate_step(cfg, plan, system=SMNG_P2)
+    if not cost.feasible:
+        return 0.0, True
+    return cost.model_tflops_per_device, False
+
+
+def test_table2_bo_finds_paper_like_config():
+    trials, best = bayesian_search(_objective_175b, SearchSpace(),
+                                   budget=40, n_init=8, seed=0)
+    # paper's conclusions: TP stays inside the node (≤8), GAS large enough to
+    # amortize the bubble, ~57 TF/s/tile ≈ 10 % of peak.  (Fig 1 shows TP=4 and
+    # TP=8 are near-equivalent inside the node, so we assert the checklist, not
+    # the exact tie-break.)
+    assert best.config["tp"] <= 8
+    assert best.config["gas"] == 100
+    plan = ParallelismConfig(pp=best.config["pp"], gas=best.config["gas"])
+    assert plan.bubble_fraction < 0.20
+    frac = best.value * 1e12 / SMNG_P2.peak_flops
+    assert 0.06 < frac < 0.14, f"best {best.value} TF/s = {frac:.1%} of peak"
+    # failures are penalized, BO still improves over random inits (Fig 4)
+    traj = best_so_far(trials)
+    assert traj[-1] >= traj[7]
+
+
+def test_bo_penalizes_infeasible():
+    trials, best = bayesian_search(_objective_175b, SearchSpace(),
+                                   budget=25, n_init=6, seed=3)
+    fails = [t for t in trials if t.failed]
+    assert all(t.value == -1.0 for t in fails)
+    assert not best.failed
+
+
+# --- C5: Fig 5 — weak/strong scaling ------------------------------------------
+
+def _scaling(kind: str, factor: int) -> float:
+    from repro.core.scaling import strong_plan, weak_plan
+    cfg = get_config("gpt_175b")
+    base_plan = ParallelismConfig(tp=8, pp=16, dp=1, mbs=3, gas=100, zero_stage=1)
+    base = estimate_step(cfg, base_plan, system=SMNG_P2)
+    plan = weak_plan(base_plan, factor) if kind == "weak" else strong_plan(base_plan, factor)
+    scaled = estimate_step(cfg, plan, system=SMNG_P2)
+    return scaled.model_tflops_per_device / base.model_tflops_per_device
+
+
+def test_fig5_weak_scaling_band():
+    eff = _scaling("weak", 8)
+    assert 0.85 <= eff <= 1.0, f"weak scaling eff {eff:.1%} (paper ~93%)"
+
+
+def test_fig5_strong_scaling_band():
+    eff = _scaling("strong", 8)
+    assert 0.70 <= eff <= 0.95, f"strong scaling eff {eff:.1%} (paper ~82%)"
+    assert eff < _scaling("weak", 8), "strong must trail weak (paper Fig 5)"
+
+
+# --- C6: checklist advisor -----------------------------------------------------
+
+def test_advisor_flags_cross_node_tp():
+    adv = RecipeAdvisor(SMNG_P2)
+    assert "tp" in adv.check(ParallelismConfig(tp=16))
+    assert "tp" not in adv.check(ParallelismConfig(tp=8))
+    assert "bubble" in adv.check(ParallelismConfig(pp=16, gas=16))

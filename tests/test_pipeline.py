@@ -1,0 +1,81 @@
+"""Pipeline parallelism correctness: the (GAS+PP-1)-superstep rotation must be
+loss- and gradient-equivalent to the plain stacked model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_mod
+from repro.core.pipeline import pipeline_loss, stack_for_pipeline, unstack_from_pipeline
+from repro.core.recipe import ParallelismConfig
+from repro.models import api as model_api
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="granite_3_2b", B=8, S=32):
+    cfg = cfg_mod.get_config(arch).reduced()
+    params = model_api.init_params(cfg, KEY)
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("pp,gas", [(2, 2), (2, 4), (2, 8)])
+def test_pipeline_loss_equivalence(pp, gas):
+    cfg, params, batch = _setup()
+    ref, _ = model_api.loss_fn(cfg, params, batch)
+    plan = ParallelismConfig(pp=pp, gas=gas)
+    pparams = dict(params, blocks=stack_for_pipeline(params["blocks"], pp))
+    got, _ = pipeline_loss(cfg, pparams, batch, plan)
+    np.testing.assert_allclose(float(ref), float(got), rtol=1e-5)
+
+
+def test_pipeline_grad_equivalence():
+    cfg, params, batch = _setup()
+    plan = ParallelismConfig(pp=2, gas=4)
+    g_ref = jax.grad(lambda p: model_api.loss_fn(cfg, p, batch)[0])(params)
+    pparams = dict(params, blocks=stack_for_pipeline(params["blocks"], 2))
+    g_pp = jax.grad(lambda p: pipeline_loss(cfg, p, batch, plan)[0])(pparams)
+    g_pp = dict(g_pp, blocks=unstack_from_pipeline(g_pp["blocks"]))
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_pp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6, rtol=2e-4)
+
+
+def test_pipeline_moe_runs():
+    cfg, params, batch = _setup("olmoe_1b_7b")
+    plan = ParallelismConfig(pp=2, gas=4)
+    pparams = dict(params, blocks=stack_for_pipeline(params["blocks"], 2))
+    loss, m = pipeline_loss(cfg, pparams, batch, plan)
+    assert np.isfinite(float(loss))
+    assert float(m["aux"]) > 0.0  # router aux flows through the pipeline
+
+
+def test_pipeline_hymba_per_layer_windows():
+    cfg, params, batch = _setup("hymba_15b")
+    plan = ParallelismConfig(pp=2, gas=4)
+    ref, _ = model_api.loss_fn(cfg, params, batch)
+    pparams = dict(params, blocks=stack_for_pipeline(params["blocks"], 2))
+    got, _ = pipeline_loss(cfg, pparams, batch, plan)
+    np.testing.assert_allclose(float(ref), float(got), rtol=1e-5)
+
+
+def test_stack_unstack_roundtrip():
+    cfg, params, _ = _setup()
+    stacked = stack_for_pipeline(params["blocks"], 2)
+    back = unstack_from_pipeline(stacked)
+    for a, b in zip(jax.tree_util.tree_leaves(params["blocks"]),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bubble_fraction_formula():
+    assert ParallelismConfig(pp=1, gas=8).bubble_fraction == 0.0
+    assert ParallelismConfig(pp=4, gas=12).bubble_fraction == pytest.approx(3 / 15)
+    # paper's law: more micro-batches → smaller bubble
+    b1 = ParallelismConfig(pp=8, gas=8).bubble_fraction
+    b2 = ParallelismConfig(pp=8, gas=64).bubble_fraction
+    assert b2 < b1

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memory
+from repro.core.recipe import ParallelismConfig
+from repro.models import layers
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(B=st.integers(1, 3), S=st.integers(1, 8), V=st.integers(2, 50),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_cross_entropy_matches_naive(B, S, V, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (B, S, V))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, V)
+    got = float(layers.cross_entropy(logits, labels))
+    probs = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.mean(jnp.take_along_axis(probs, labels[..., None], -1)))
+    assert abs(got - want) < 1e-4
+
+
+@given(S=st.integers(1, 16), D=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_rope_preserves_norm_and_relativity(S, D, seed):
+    """RoPE is a rotation: preserves vector norms; q·k depends only on the
+    position difference."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, S, 1, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    rx = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(rx), axis=-1), rtol=2e-5)
+    # relativity: shifting both positions by c leaves inner products unchanged
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, D))
+    def dot_at(pq, pk):
+        rq = layers.apply_rope(q, jnp.array([[pq]]))
+        rk = layers.apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(rq * rk))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-3
+
+
+@given(pp=st.sampled_from([1, 2, 4, 8]), gas=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_bubble_fraction_bounds(pp, gas):
+    b = ParallelismConfig(pp=pp, gas=gas).bubble_fraction
+    assert 0.0 <= b < 1.0
+    if pp == 1:
+        assert b == 0.0
+    # monotone: more micro-batches never increases the bubble
+    b2 = ParallelismConfig(pp=pp, gas=gas + 1).bubble_fraction
+    assert b2 <= b
+
+
+@given(n=st.integers(10**6, 10**12))
+@settings(**SETTINGS)
+def test_memory_model_16_bytes_per_param(n):
+    mb = memory.model_state_bytes(n)
+    assert mb.total == 16.0 * n
+    assert mb.params == 6.0 * n
+
+
+@given(tp=st.sampled_from([1, 2, 4, 8, 16]), pp=st.sampled_from([1, 2, 4]),
+       dp=st.sampled_from([1, 4, 16]), zero=st.sampled_from([1, 2, 3]))
+@settings(**SETTINGS)
+def test_per_device_memory_shrinks_with_parallelism(tp, pp, dp, zero):
+    from repro.configs import get_config
+    cfg = get_config("granite_3_2b")
+    if cfg.n_layers % pp:
+        return
+    base = memory.per_device_bytes(cfg, dp=1, tp=1, pp=1, zero_stage=zero)
+    shard = memory.per_device_bytes(cfg, dp=dp, tp=tp, pp=pp, zero_stage=zero)
+    assert shard["params"] <= base["params"] + 1
+    assert shard["optimizer"] <= base["optimizer"] + 1
+
+
+@given(seed=st.integers(0, 2**30), window=st.sampled_from([2, 4, 8]),
+       S=st.integers(9, 24))
+@settings(**SETTINGS)
+def test_swa_equals_full_attention_on_short_history(seed, window, S):
+    """With S ≤ window, sliding-window attention must equal full attention."""
+    from repro.kernels.ref import mha_reference
+    key = jax.random.PRNGKey(seed)
+    S = min(S, window)  # truncate so the window covers everything
+    q = jax.random.normal(key, (1, S, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, 2, 8))
+    a = mha_reference(q, k, v, causal=True, window=window)
+    b = mha_reference(q, k, v, causal=True, window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(max_examples=10, deadline=None)
+def test_zero_shard_preserves_or_reduces(seed):
+    """zero_shard never un-shards existing axes and only adds divisible ones."""
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core.zero import zero_shard
+    rng = np.random.default_rng(seed)
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    dim0 = int(rng.integers(1, 64)) * 4
+    spec = zero_shard(P(None, None), (dim0, 8), mesh, ("data",))
+    assert spec[0] == "data" or spec == P(None, None)

@@ -1,0 +1,168 @@
+"""Substrate tests: data pipeline determinism/slicing, optimizer math,
+gradient compression, watchdog, HLO analyzer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM, make_dataset
+from repro.launch.hlo_analysis import analyze_module, collective_bytes
+from repro.optim import adamw
+from repro.optim.compress import (apply_compression, compress_bf16,
+                                  init_error_feedback)
+from repro.runtime.watchdog import StepWatchdog
+
+
+# --- data ---------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    cfg = get_config("granite_3_2b").reduced()
+    ds = SyntheticLM(DataConfig(seq_len=32, global_batch=8), cfg.vocab_size)
+    a, b = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_slicing_disjoint():
+    cfg = get_config("granite_3_2b").reduced()
+    full = SyntheticLM(DataConfig(seq_len=32, global_batch=8), cfg.vocab_size)
+    h0 = SyntheticLM(DataConfig(seq_len=32, global_batch=8, host_id=0, num_hosts=2),
+                     cfg.vocab_size)
+    h1 = SyntheticLM(DataConfig(seq_len=32, global_batch=8, host_id=1, num_hosts=2),
+                     cfg.vocab_size)
+    b0, b1 = h0.batch(3), h1.batch(3)
+    assert b0["tokens"].shape[0] == 4 and b1["tokens"].shape[0] == 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = get_config("granite_3_2b").reduced()
+    ds = SyntheticLM(DataConfig(seq_len=32, global_batch=4), cfg.vocab_size)
+    b = ds.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:-1], b["labels"][:, :-2])
+    assert b["loss_mask"][:, -1].sum() == 0  # padded tail carries no loss
+
+
+def test_memmap_dataset(tmp_path):
+    cfg = get_config("granite_3_2b").reduced()
+    data = np.arange(10000, dtype=np.uint32)
+    path = tmp_path / "toks.bin"
+    data.tofile(path)
+    ds = make_dataset(DataConfig(seq_len=16, global_batch=4, path=str(path)), cfg)
+    b = ds.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# --- optimizer ------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st = adamw.init_opt_state(p)
+    cfg = adamw.AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                            grad_clip=1e9)
+    newp, newst, m = adamw.adamw_update(g, st, p, jnp.float32(0.01), cfg)
+    # after one step Adam's update is -lr * g/(|g|+eps) elementwise = -lr*sign
+    np.testing.assert_allclose(np.asarray(newp["w"]),
+                               np.asarray(p["w"]) - 0.01 * np.sign(np.asarray(g["w"])),
+                               atol=1e-5)
+    assert int(newst["step"]) == 1
+
+
+def test_grad_clip_caps_norm():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st = adamw.init_opt_state(p)
+    _, _, metrics = adamw.adamw_update(g, st, p, jnp.float32(0.1),
+                                       adamw.AdamWConfig(grad_clip=1.0))
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)  # pre-clip norm
+
+
+def test_bf16_compression_roundtrip_error_small():
+    g = {"w": jnp.linspace(-3, 3, 1024)}
+    out = compress_bf16(g)
+    err = float(jnp.max(jnp.abs(out["w"] - g["w"])))
+    assert err < 0.02
+
+
+def test_int8_error_feedback_unbiased_over_steps():
+    """With error feedback the accumulated compressed sum tracks the true sum."""
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (512,))}
+    ef = init_error_feedback(g)
+    acc_true = jnp.zeros((512,))
+    acc_comp = jnp.zeros((512,))
+    for i in range(20):
+        gi = {"w": g["w"] * (1.0 + 0.1 * i)}
+        comp, ef = apply_compression(gi, "int8_ef", ef)
+        acc_true += gi["w"]
+        acc_comp += comp["w"]
+    rel = float(jnp.linalg.norm(acc_comp - acc_true) / jnp.linalg.norm(acc_true))
+    assert rel < 0.01, rel
+
+
+# --- watchdog -------------------------------------------------------------------
+
+def test_watchdog_fires_on_deadline():
+    clock = {"t": 0.0}
+    fired = []
+    wd = StepWatchdog(10.0, on_timeout=lambda s, el: fired.append((s, el)),
+                      clock=lambda: clock["t"])
+    wd.begin_step(3)
+    clock["t"] = 5.0
+    wd.check_once()
+    assert not fired
+    clock["t"] = 11.0
+    wd.check_once()
+    wd.check_once()  # fires once per step, not repeatedly
+    assert fired == [(3, 11.0)]
+
+
+def test_watchdog_straggler_detection():
+    clock = {"t": 0.0}
+    wd = StepWatchdog(1e9, on_timeout=lambda *a: None, clock=lambda: clock["t"])
+    for s in range(5):
+        wd.begin_step(s)
+        clock["t"] += 1.0
+        wd.end_step(s)
+    wd.begin_step(6)
+    clock["t"] += 3.0  # 3× the median step time
+    assert wd.is_straggling(factor=2.0)
+
+
+# --- HLO analyzer ----------------------------------------------------------------
+
+def test_analyzer_weights_nested_scans():
+    M = 128
+    def f(x):
+        def outer(c, _):
+            def inner(c, _):
+                return c @ c, None
+            out, _ = jax.lax.scan(inner, c, None, length=5)
+            return out, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+    t = analyze_module(c.as_text())
+    assert t["flops"] == pytest.approx(2 * M**3 * 15, rel=0.01)
+
+
+def test_collective_parser_on_crafted_hlo():
+    hlo = """
+HloModule m
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%p), replica_groups={}
+  %ag = f32[16]{0} all-gather(%ar), dimensions={0}
+  %cp-start = f32[8]{0} collective-permute-start(%p), source_target_pairs={{0,1}}
+  ROOT %out = f32[8]{0} add(%ar, %p)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 32.0
+    assert out["all-gather"] == 64.0
+    assert out["collective-permute"] == 32.0
