@@ -1,7 +1,8 @@
 """Benchmark harness — one entry per paper table/figure plus kernel
-micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
+micro-benchmarks and end-to-end Session API timings.  Prints
+``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1|fig1|fig2|fig3|bo|fig5|kernels]
+  PYTHONPATH=src python -m benchmarks.run [--only table1|fig1|fig2|fig3|bo|fig5|kernels|session]
 """
 
 from __future__ import annotations
@@ -46,6 +47,43 @@ def kernel_microbench():
     return rows
 
 
+def session_bench():
+    """End-to-end timings through the public Session API: one optimizer step
+    (train) and per-token decode (serve), smoke-size on CPU."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core import stepfn
+    from repro.data import DataConfig
+    from repro.session import TrainSession
+
+    rows = []
+    sess = TrainSession.from_recipe(
+        "granite_3_2b", reduced=True,
+        train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=2, total_steps=16),
+        data_cfg=DataConfig(seq_len=128, global_batch=8))
+    sess.step()  # compile
+    n = 5
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(sess.step()["loss"])
+    rows.append(("session/train_step", (time.perf_counter() - t0) / n * 1e6,
+                 f"{sess.cfg.name} S=128 B=8"))
+
+    inf = sess.to_inference()
+    prompts = jnp.zeros((4, 4), jnp.int32)
+    gen = 16
+    # warm-up must use the same gen: cache shapes are (B, prompt+gen, ...) so
+    # a shorter warm-up would leave the real run recompiling inside the timer
+    inf.generate(prompts, gen)
+    t0 = time.perf_counter()
+    toks = jax.block_until_ready(inf.generate(prompts, gen))
+    per_tok = (time.perf_counter() - t0) / (toks.shape[1] - 1) * 1e6
+    rows.append(("session/decode_step", per_tok,
+                 f"{sess.cfg.name} batch=4 greedy"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -55,6 +93,7 @@ def main() -> None:
 
     suites = dict(paper_figures.ALL)
     suites["kernels"] = kernel_microbench
+    suites["session"] = session_bench
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

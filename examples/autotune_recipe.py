@@ -1,5 +1,7 @@
 """Scenario: reproduce the paper's §5 — Bayesian-optimization search over
-(PP, TP, MBS, GAS) for the 175B model, with penalized OOM trials.
+(PP, TP, MBS, GAS) for the 175B model, with penalized OOM trials — then
+compose the winning recipe into an abstract ``TrainSession`` (shape-only:
+no memory, no compute) to prove it assembles end-to-end.
 
   PYTHONPATH=src python examples/autotune_recipe.py [--budget 40]
 """
@@ -15,6 +17,7 @@ from repro.core.autotune import SearchSpace, bayesian_search, best_so_far
 from repro.core.cost_model import estimate_step
 from repro.core.recipe import ParallelismConfig
 from repro.core.systems import SMNG_P2, TPU_V5E
+from repro.session import TrainSession
 
 
 def main():
@@ -44,6 +47,16 @@ def main():
     frac = best.value * 1e12 / system.peak_flops
     print(f"\nbest: {best.config} → {best.value:.1f} TF/s/device "
           f"({frac:.1%} of peak; paper: PP=16 TP=8 MBS=3 GAS=100 @ ~10%)")
+
+    # sanity: the winning recipe composes into a session (abstract = shapes
+    # only, so the 175B state costs nothing here)
+    plan = ParallelismConfig(tp=best.config["tp"], pp=best.config["pp"], dp=1,
+                             mbs=best.config["mbs"], gas=best.config["gas"],
+                             zero_stage=1)
+    sess = TrainSession.from_recipe(cfg, plan=plan, abstract=True)
+    print(f"session: {sess.cfg.name} composes under {plan.tp=} {plan.pp=} "
+          f"→ {sess.n_params/1e9:.1f}B params"
+          + (f"; advisor: {sess.advice}" if sess.advice else ""))
 
 
 if __name__ == "__main__":

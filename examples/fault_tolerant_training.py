@@ -1,5 +1,6 @@
-"""Scenario: fault-tolerant training — crash mid-run, restart, verify the
-resumed run continues bit-exactly; then rescale the pipeline (elastic).
+"""Scenario: fault-tolerant training through ``TrainSession`` — crash
+mid-run, restart, verify the resumed run continues bit-exactly; then rescale
+the pipeline (elastic restore under a different PP).
 
   PYTHONPATH=src python examples/fault_tolerant_training.py
 """
@@ -13,25 +14,20 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro.configs import get_config
 from repro.core import stepfn
 from repro.core.recipe import ParallelismConfig
-from repro.data import DataConfig, make_dataset
-from repro.runtime.train_loop import LoopConfig, run_training
+from repro.data import DataConfig
+from repro.session import TrainSession
 
 
 def run(ckpt_dir, steps, fail_at=None, pp=1):
-    cfg = get_config("granite_3_2b").reduced()
-    plan = ParallelismConfig(pp=pp, gas=max(2, pp))
-    tcfg = stepfn.TrainConfig(peak_lr=1e-3, warmup=2, total_steps=steps)
-    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(0), tcfg)
-    step_fn = jax.jit(stepfn.make_train_step(cfg, plan, tcfg))
-    ds = make_dataset(DataConfig(seq_len=64, global_batch=8), cfg)
-    return run_training(state, step_fn, ds.batch,
-                        LoopConfig(total_steps=steps, ckpt_every=5,
-                                   ckpt_dir=str(ckpt_dir), log_every=10,
-                                   async_ckpt=False),
-                        plan=plan, fail_at_step=fail_at)
+    sess = TrainSession.from_recipe(
+        "granite_3_2b", reduced=True,
+        plan=ParallelismConfig(pp=pp, gas=max(2, pp)),
+        train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=2, total_steps=steps),
+        data_cfg=DataConfig(seq_len=64, global_batch=8))
+    return sess.run(steps, ckpt_dir=ckpt_dir, ckpt_every=5, log_every=10,
+                    async_ckpt=False, fail_at_step=fail_at)
 
 
 def main():

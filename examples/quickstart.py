@@ -1,5 +1,20 @@
-"""Quickstart: train a small GPT-style model with the recipe, checkpoint it,
-and generate text — the 60-second tour of the public API.
+"""Quickstart — the 60-second tour of the public Session API.
+
+Everything goes through two objects:
+
+``TrainSession.from_recipe(arch, plan=..., train_cfg=..., data_cfg=...)``
+    owns the whole training lifecycle: config resolution, the paper's
+    recipe checklist (``.advice``), train state + shardings, the jitted
+    step, the deterministic data pipeline, and the fault-tolerant
+    checkpointed loop (``.run(ckpt_dir=...)``).
+
+``InferenceSession`` (here via ``sess.to_inference()``)
+    owns serving: family-aware cache init, jitted prefill/decode, and a
+    batched greedy ``generate()``.
+
+Model families (dense/moe/ssm/hybrid/vlm/encdec) are plugins — see
+``repro.models.registry.register_family`` — so every session works with
+any registered family unchanged.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,48 +24,38 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.core import stepfn
-from repro.core.recipe import ParallelismConfig, RecipeAdvisor
-from repro.data import DataConfig, make_dataset
-from repro.models import api as model_api
+from repro.core.recipe import ParallelismConfig
+from repro.data import DataConfig
+from repro.session import TrainSession
 
 
 def main():
-    # 1. pick an architecture from the zoo (reduced config for CPU)
-    cfg = get_config("granite_3_2b").reduced()
-    print(f"model: {cfg.name} ({cfg.n_params()/1e6:.1f}M params)")
+    # 1. one call composes config → recipe → state → jitted step → data
+    #    (reduced config so it trains for real on CPU)
+    sess = TrainSession.from_recipe(
+        "granite_3_2b", reduced=True,
+        plan=ParallelismConfig(tp=1, pp=1, dp=1, gas=1),
+        train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=5, total_steps=50),
+        data_cfg=DataConfig(seq_len=128, global_batch=8))
+    print(f"model: {sess.cfg.name} ({sess.n_params/1e6:.1f}M params)")
 
-    # 2. the recipe: ask the advisor what the paper's checklist says
-    plan = ParallelismConfig(tp=1, pp=1, dp=1, gas=1)
-    print("advisor:", RecipeAdvisor().check(plan) or "plan follows the checklist")
+    # 2. the recipe: what does the paper's checklist say about this plan?
+    print("advisor:", sess.advice or "plan follows the checklist")
 
-    # 3. train state + step function
-    tcfg = stepfn.TrainConfig(peak_lr=1e-3, warmup=5, total_steps=50)
-    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(0), tcfg)
-    train_step = jax.jit(stepfn.make_train_step(cfg, plan, tcfg))
-
-    # 4. data pipeline (deterministic, resumable)
-    ds = make_dataset(DataConfig(seq_len=128, global_batch=8), cfg)
+    # 3. train — step-by-step here to show the loop; ``sess.run()`` does the
+    #    same with checkpoint/restore and preemption handling built in
     for step in range(50):
-        state, metrics = train_step(state, ds.batch(step))
+        metrics = sess.step()
         if step % 10 == 0:
             print(f"step {step:3d}  loss {float(metrics['loss']):.4f}")
 
-    # 5. generate with the trained weights
-    params = state["params"]
-    caches = model_api.init_cache(cfg, params, 1, 64)
-    tok = jnp.zeros((1,), jnp.int32)
-    outs = []
-    decode = jax.jit(lambda p, t, i, c: model_api.decode_step(cfg, p, t, i, c))
-    for t in range(32):
-        logits, caches = decode(params, tok, jnp.int32(t), caches)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs.append(int(tok[0]))
-    print("generated:", outs[:16])
+    # 4. generate with the trained weights
+    inf = sess.to_inference()
+    toks = inf.generate(jnp.zeros((1, 1), jnp.int32), 32)
+    print("generated:", [int(t) for t in toks[0][:16]])
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ class TrainConfig:
     peak_lr: float = 3e-4
     warmup: int = 200
     total_steps: int = 10000
-    adam: adamw.AdamWConfig = adamw.AdamWConfig()
+    adam: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
     compression: Optional[str] = None      # None | bf16 | int8_ef
 
 

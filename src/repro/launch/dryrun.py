@@ -19,33 +19,22 @@ from pathlib import Path
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
 from repro import configs as cfg_mod
-from repro.core import stepfn
 from repro.core.cost_model import active_params, model_flops_per_token
 from repro.core.recipe import ParallelismConfig
 from repro.launch import plans as plans_mod
 from repro.launch import shapes as shapes_mod
 from repro.launch.hlo_analysis import analyze_module, collective_bytes
 from repro.launch.mesh import make_production_mesh, make_recipe_mesh
-from repro.models import api as model_api
 from repro.models.config import ModelConfig
+from repro.session import InferenceSession, TrainSession
 
 
 def _train_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape):
-    """(lowered, aux-info) for a train_step cell."""
-    tcfg = stepfn.TrainConfig()
-    state_shapes = jax.eval_shape(
-        lambda key: stepfn.init_state(cfg, plan, key, tcfg), jax.random.PRNGKey(0))
-    state_sh = stepfn.state_shardings(cfg, state_shapes, mesh, plan)
-    batch_specs = shapes_mod.train_input_specs(cfg, shape)
-    batch_sh = stepfn.batch_shardings(batch_specs, mesh)
-    step = stepfn.make_train_step(cfg, plan, tcfg, mesh)
-    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
-                     out_shardings=(state_sh, None), donate_argnums=(0,))
-    lowered = jitted.lower(state_shapes, batch_specs)
+    """(lowered, aux-info) for a train_step cell — an abstract TrainSession
+    composes state shapes, shardings and the sharded step; we just lower."""
+    sess = TrainSession.from_recipe(cfg, plan=plan, mesh=mesh, abstract=True)
+    lowered = sess.lower(shapes_mod.train_input_specs(cfg, shape))
     tokens = shape.global_batch * shape.seq_len
     useful = model_flops_per_token(cfg, shape.seq_len) * tokens
     return lowered, {"model_flops": useful}
@@ -55,48 +44,14 @@ def _serve_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape,
                      *, prefill_last_only: bool = False):
     """(lowered, aux) for serve_step (decode) or prefill cells."""
     B = shape.global_batch
-    dt = cfg.compute_dtype
-
-    def serve_params(key):
-        p = model_api.init_params(cfg, key)
-        return jax.tree_util.tree_map(lambda x: x.astype(dt), p)
-
-    params_shapes = jax.eval_shape(serve_params, jax.random.PRNGKey(0))
-    params_sh = plans_mod.serve_param_sharding(params_shapes, mesh)
-
+    sess = InferenceSession.from_recipe(cfg, plan=plan, mesh=mesh, abstract=True)
     if shape.kind == "prefill":
-        batch_specs = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
-        if cfg.family == "vlm":
-            batch_specs["vision_embeds"] = jax.ShapeDtypeStruct(
-                (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
-        if cfg.family == "encdec":
-            batch_specs["frames"] = jax.ShapeDtypeStruct(
-                (B, cfg.enc_frames, cfg.d_model), jnp.float32)
-        batch_sh = stepfn.batch_shardings(batch_specs, mesh)
-        fn = stepfn.make_prefill(cfg, plan, mesh, last_only=prefill_last_only)
-        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
-        lowered = jitted.lower(params_shapes, batch_specs)
+        lowered = sess.lower_prefill(sess.prefill_input_specs(B, shape.seq_len),
+                                     last_only=prefill_last_only)
         useful = 2.0 * active_params(cfg) * B * shape.seq_len
         return lowered, {"model_flops": useful}
-
     # decode: one token against a KV/state cache of seq_len
-    def mk_cache(params):
-        batch = None
-        if cfg.family == "encdec":
-            batch = {"frames": jnp.zeros((B, cfg.enc_frames, cfg.d_model), jnp.float32)}
-        return model_api.init_cache(cfg, params, B, shape.seq_len, batch)
-
-    cache_shapes = jax.eval_shape(mk_cache, params_shapes)
-    cache_sh = plans_mod.cache_shardings(cache_shapes, mesh,
-                                         global_batch=B, cache_len=shape.seq_len)
-    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
-    t = jax.ShapeDtypeStruct((), jnp.int32)
-    tok_sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec(
-        plans_mod.batch_sharding(mesh, B)))
-    fn = stepfn.make_serve_step(cfg, plan, mesh)
-    jitted = jax.jit(fn, in_shardings=(params_sh, tok_sh, None, cache_sh),
-                     out_shardings=(tok_sh, cache_sh), donate_argnums=(3,))
-    lowered = jitted.lower(params_shapes, tok, t, cache_shapes)
+    lowered = sess.lower_decode(B, shape.seq_len)
     useful = 2.0 * active_params(cfg) * B
     return lowered, {"model_flops": useful}
 
@@ -142,6 +97,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)          # body-once (raw) counts
         walk = analyze_module(hlo)            # trip-count-weighted totals

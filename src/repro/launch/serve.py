@@ -1,5 +1,5 @@
-"""Batched serving driver: prefill + autoregressive decode with ring-buffer
-KV caches (the inference side of the recipe — TP sharding, batch-DP).
+"""Batched serving driver — a thin CLI over ``InferenceSession`` (prefill +
+autoregressive decode with ring-buffer KV caches; TP sharding, batch-DP).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b --reduced \
       --batch 4 --prompt-len 32 --gen 32
@@ -11,33 +11,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs as cfg_mod
-from repro.core import stepfn
-from repro.core.recipe import ParallelismConfig
-from repro.models import api as model_api
-
-
-def generate(cfg, params, prompts, max_len: int, gen: int):
-    """Greedy decode: teacher-force the prompt, then sample argmax."""
-    B, P = prompts.shape
-    batch = None
-    if cfg.family == "encdec":
-        batch = {"frames": jnp.zeros((B, cfg.enc_frames, cfg.d_model), jnp.float32)}
-    caches = model_api.init_cache(cfg, params, B, max_len, batch)
-    step = jax.jit(lambda p, tok, t, c: model_api.decode_step(cfg, p, tok, t, c))
-    out = [prompts[:, 0]]
-    tok = prompts[:, 0]
-    for t in range(max_len - 1):
-        logits, caches = step(params, tok, jnp.int32(t), caches)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        tok = prompts[:, t + 1] if t + 1 < P else nxt
-        out.append(tok)
-        if len(out) >= P + gen:
-            break
-    return jnp.stack(out, axis=1)
+from repro.session import InferenceSession
 
 
 def main(argv=None):
@@ -49,17 +25,12 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     args = ap.parse_args(argv)
 
-    cfg = cfg_mod.get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(0)
-    params = model_api.init_params(cfg, key)
-    params = jax.tree_util.tree_map(lambda x: x.astype(cfg.compute_dtype), params)
-
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    max_len = args.prompt_len + args.gen
+    sess = InferenceSession.from_recipe(args.arch, reduced=args.reduced, seed=0)
+    cfg = sess.cfg
+    prompts = jax.random.randint(jax.random.PRNGKey(0),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
     t0 = time.time()
-    toks = generate(cfg, params, prompts, max_len, args.gen)
+    toks = sess.generate(prompts, args.gen)
     dt = time.time() - t0
     n_new = toks.shape[1] - args.prompt_len
     print(f"[serve] {cfg.name}: generated {n_new} tokens × batch {args.batch} "

@@ -1,4 +1,4 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin CLI over ``TrainSession``.
 
   PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
       --steps 200 --seq 256 --batch 32 --reduced --ckpt-dir /tmp/ckpt
@@ -14,15 +14,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs as cfg_mod
 from repro.core import stepfn
-from repro.core.recipe import ParallelismConfig, RecipeAdvisor
-from repro.data import DataConfig, batch_iterator, make_dataset
-from repro.runtime.train_loop import LoopConfig, run_training
+from repro.core.recipe import ParallelismConfig
+from repro.data import DataConfig
+from repro.session import TrainSession
 
 
 def main(argv=None):
@@ -39,47 +34,32 @@ def main(argv=None):
     ap.add_argument("--pp", type=int, default=1)
     ap.add_argument("--gas", type=int, default=1)
     ap.add_argument("--zero", type=int, default=1)
-    ap.add_argument("--compression", default=None, choices=[None, "bf16", "int8_ef"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a crash at this step (restart drill)")
     args = ap.parse_args(argv)
 
-    cfg = cfg_mod.get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
     plan = ParallelismConfig(pp=args.pp, gas=max(args.gas, args.pp),
                              zero_stage=args.zero)
-    for k, v in RecipeAdvisor().check(plan).items():
+    tcfg = stepfn.TrainConfig(
+        peak_lr=args.lr, total_steps=args.steps,
+        warmup=max(1, args.steps // 10),
+        compression=None if args.compression == "none" else args.compression)
+
+    sess = TrainSession.from_recipe(
+        args.arch, reduced=args.reduced, plan=plan, train_cfg=tcfg,
+        data_cfg=DataConfig(seq_len=args.seq, global_batch=args.batch))
+    for k, v in sess.advice.items():
         print(f"[advisor:{k}] {v}")
-
-    tcfg = stepfn.TrainConfig(peak_lr=args.lr, total_steps=args.steps,
-                              warmup=max(1, args.steps // 10),
-                              compression=args.compression)
-    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(0), tcfg)
-    n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(state["params"]))
-    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, plan={plan}")
-
-    train_step = jax.jit(stepfn.make_train_step(cfg, plan, tcfg), donate_argnums=(0,))
-
-    ds = make_dataset(DataConfig(seq_len=args.seq, global_batch=args.batch), cfg)
-    it = batch_iterator(ds, cfg)
-    cache = {}
-
-    def batches(step):
-        if step not in cache:
-            cache.clear()
-            from repro.data.pipeline import add_modality_inputs
-            b = ds.batch(step)
-            cache[step] = add_modality_inputs(b, cfg, step)
-        return cache[step]
+    print(f"[train] {sess.cfg.name}: {sess.n_params/1e6:.1f}M params, "
+          f"plan={sess.plan}")
 
     t0 = time.time()
-    out = run_training(state, train_step, batches,
-                       LoopConfig(total_steps=args.steps,
-                                  ckpt_every=args.ckpt_every,
-                                  ckpt_dir=args.ckpt_dir,
-                                  log_every=max(1, args.steps // 20)),
-                       plan=plan, fail_at_step=args.fail_at)
+    out = sess.run(args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=args.ckpt_every,
+                   log_every=max(1, args.steps // 20),
+                   fail_at_step=args.fail_at)
     dt = time.time() - t0
     hist = out["history"]
     print(f"[train] done in {dt:.1f}s; loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f}")

@@ -2,6 +2,7 @@
 
 Pure-functional: ``init_params(cfg, key)`` builds a pytree of fp32 master
 params; ``loss_fn`` / ``serve_step`` consume a compute-dtype cast of it.
+Families are plugins — see ``repro.models.registry``.
 """
 
 from repro.models.api import (  # noqa: F401
@@ -11,4 +12,11 @@ from repro.models.api import (  # noqa: F401
     forward,
     init_cache,
     decode_step,
+)
+from repro.models.registry import (  # noqa: F401
+    ModelFamily,
+    family_of,
+    get_family,
+    register_family,
+    registered_families,
 )

@@ -1,10 +1,14 @@
-"""Unified model API: one entry point per lifecycle stage, dispatched on family.
+"""Unified model API: one entry point per lifecycle stage, dispatched through
+the pluggable family registry (``repro.models.registry``).
 
 ``init_params``  → fp32 master parameter pytree
 ``loss_fn``      → (loss, metrics) for a training batch
 ``forward``      → logits for a full sequence (prefill)
 ``init_cache``   → decode caches (KV rings / SSM states / cross-KV)
 ``decode_step``  → one-token autoregressive step
+
+New families register themselves with ``@register_family("<name>")`` and are
+picked up here (and by every session/driver) with zero dispatch changes.
 """
 
 from __future__ import annotations
@@ -12,50 +16,41 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
-from repro.models import encdec, transformer
+# imported for their registration side effects (each module registers its
+# families at import time)
+from repro.models import encdec, transformer  # noqa: F401
 from repro.models.config import ModelConfig
+from repro.models.registry import (  # noqa: F401 — re-exported public surface
+    ModelFamily, family_of, get_family, register_family, registered_families,
+)
 
 
 def init_params(cfg: ModelConfig, key) -> Any:
-    if cfg.family == "encdec":
-        return encdec.encdec_init(key, cfg)
-    return transformer.lm_init(key, cfg)
+    return family_of(cfg).init_params(cfg, key)
 
 
 def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
             *, remat_policy: str = "full"):
-    if cfg.family == "encdec":
-        return encdec.encdec_loss(cfg, params, batch, remat_policy=remat_policy)
-    return transformer.lm_loss(cfg, params, batch, remat_policy=remat_policy)
+    return family_of(cfg).loss(cfg, params, batch, remat_policy=remat_policy)
 
 
 def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
             *, remat_policy: str = "none", last_only: bool = False):
-    if cfg.family == "encdec":
-        enc_out = encdec.encode(cfg, params, batch["frames"], remat_policy=remat_policy)
-        logits = encdec.decode_train(cfg, params, enc_out, batch["tokens"],
-                                     remat_policy=remat_policy)
-        return logits[:, -1:] if last_only else logits
-    logits, _ = transformer.lm_forward(cfg, params, batch,
-                                       remat_policy=remat_policy,
-                                       last_only=last_only)
-    return logits
+    return family_of(cfg).forward(cfg, params, batch,
+                                  remat_policy=remat_policy, last_only=last_only)
 
 
 def init_cache(cfg: ModelConfig, params, batch_size: int, max_len: int,
                batch: Dict[str, jax.Array] | None = None):
-    if cfg.family == "encdec":
-        assert batch is not None and "frames" in batch
-        return encdec.encdec_cache_init(cfg, params, batch["frames"], max_len)
-    return transformer.lm_cache_init(cfg, batch_size, max_len)
+    fam = family_of(cfg)
+    if batch is None:
+        batch = fam.serve_batch(cfg, batch_size)
+    return fam.init_cache(cfg, params, batch_size, max_len, batch)
 
 
 def decode_step(cfg: ModelConfig, params, token: jax.Array, t: jax.Array, caches):
-    if cfg.family == "encdec":
-        return encdec.encdec_decode_step(cfg, params, token, t, caches)
-    return transformer.lm_decode_step(cfg, params, token, t, caches)
+    return family_of(cfg).decode_step(cfg, params, token, t, caches)
 
 
 class Model:
@@ -63,6 +58,7 @@ class Model:
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+        self.family = family_of(cfg)
 
     def init(self, key):
         return init_params(self.cfg, key)

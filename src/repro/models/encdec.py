@@ -165,3 +165,44 @@ def encdec_decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
     x = layers.norm_apply(cfg.norm, params["final_norm"], x)
     logits = layers.unembed(params["embed"], x)[:, 0]
     return logits, {"cross": caches["cross"], "self": new_self}
+
+
+# ---------------------------------------------------------------------------
+# family registration
+# ---------------------------------------------------------------------------
+
+from repro.models.registry import ModelFamily, register_family  # noqa: E402
+
+
+@register_family("encdec")
+class EncDecFamily(ModelFamily):
+    """Whisper-style encoder–decoder: encode audio frames once, then
+    autoregressive decode with self-KV rings + precomputed cross-KV."""
+
+    def init_params(self, cfg, key):
+        return encdec_init(key, cfg)
+
+    def loss(self, cfg, params, batch, *, remat_policy="full"):
+        return encdec_loss(cfg, params, batch, remat_policy=remat_policy)
+
+    def forward(self, cfg, params, batch, *, remat_policy="none", last_only=False):
+        enc_out = encode(cfg, params, batch["frames"], remat_policy=remat_policy)
+        logits = decode_train(cfg, params, enc_out, batch["tokens"],
+                              remat_policy=remat_policy)
+        return logits[:, -1:] if last_only else logits
+
+    def init_cache(self, cfg, params, batch_size, max_len, batch=None):
+        assert batch is not None and "frames" in batch, \
+            "encdec cache init needs encoder frames (family.serve_batch stubs them)"
+        return encdec_cache_init(cfg, params, batch["frames"], max_len)
+
+    def decode_step(self, cfg, params, token, t, caches):
+        return encdec_decode_step(cfg, params, token, t, caches)
+
+    def serve_batch(self, cfg, batch_size):
+        return {"frames": jnp.zeros((batch_size, cfg.enc_frames, cfg.d_model),
+                                    jnp.float32)}
+
+    def extra_input_specs(self, cfg, batch_size):
+        return {"frames": jax.ShapeDtypeStruct(
+            (batch_size, cfg.enc_frames, cfg.d_model), jnp.float32)}

@@ -1,0 +1,110 @@
+"""Pluggable model-family registry.
+
+A *family* is the unit of lifecycle dispatch: it owns the five hooks every
+model must provide (``init_params`` / ``loss`` / ``forward`` / ``init_cache``
+/ ``decode_step``) plus optional serving hooks for families with non-token
+inputs (encoder frames, vision embeddings).  ``repro.models.api`` dispatches
+on ``cfg.family`` through this registry only — adding a new architecture
+family is::
+
+    from repro.models.registry import ModelFamily, register_family
+
+    @register_family("rwkv")
+    class RWKVFamily(ModelFamily):
+        def init_params(self, cfg, key): ...
+        ...
+
+and every driver (TrainSession, InferenceSession, dry-run, benchmarks)
+picks it up with zero changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.models.config import ModelConfig
+
+
+class ModelFamily:
+    """The five lifecycle hooks + optional serving hooks.
+
+    Implementations are stateless singletons; ``cfg`` is threaded through
+    every call (the codebase is pure-functional — params live in pytrees).
+    """
+
+    name: str = "?"
+
+    # --- required lifecycle hooks -------------------------------------
+    def init_params(self, cfg: ModelConfig, key) -> Any:
+        """fp32 master parameter pytree."""
+        raise NotImplementedError
+
+    def loss(self, cfg: ModelConfig, params, batch: Dict[str, Any], *,
+             remat_policy: str = "full"):
+        """(loss, metrics) for a training batch."""
+        raise NotImplementedError
+
+    def forward(self, cfg: ModelConfig, params, batch: Dict[str, Any], *,
+                remat_policy: str = "none", last_only: bool = False):
+        """Logits for a full sequence (prefill)."""
+        raise NotImplementedError
+
+    def init_cache(self, cfg: ModelConfig, params, batch_size: int,
+                   max_len: int, batch: Optional[Dict[str, Any]] = None):
+        """Decode caches (KV rings / SSM states / cross-KV)."""
+        raise NotImplementedError
+
+    def decode_step(self, cfg: ModelConfig, params, token, t, caches):
+        """One-token autoregressive step → (logits, caches)."""
+        raise NotImplementedError
+
+    # --- optional serving hooks ---------------------------------------
+    def serve_batch(self, cfg: ModelConfig, batch_size: int) -> Optional[Dict[str, Any]]:
+        """Extra non-token inputs a serving cache init needs (None for
+        token-only families; encdec returns stub encoder frames)."""
+        return None
+
+    def extra_input_specs(self, cfg: ModelConfig, batch_size: int) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the family's non-token prefill inputs
+        (used by the dry-run to build abstract batch specs)."""
+        return {}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<ModelFamily {self.name!r} ({type(self).__name__})>"
+
+
+_REGISTRY: Dict[str, ModelFamily] = {}
+
+
+def register_family(name: str, *aliases: str):
+    """Class (or instance) decorator registering a family under ``name``
+    and any ``aliases``.  Re-registration overwrites (last wins), so test
+    doubles can shadow a family without global teardown."""
+
+    def deco(obj):
+        fam = obj() if isinstance(obj, type) else obj
+        if fam.name == ModelFamily.name:
+            fam.name = name
+        for n in (name, *aliases):
+            _REGISTRY[n] = fam
+        return obj
+
+    return deco
+
+
+def get_family(name: str) -> ModelFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model family {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))} — add one with "
+            "@register_family(...)") from None
+
+
+def family_of(cfg: ModelConfig) -> ModelFamily:
+    return get_family(cfg.family)
+
+
+def registered_families() -> tuple:
+    return tuple(sorted(_REGISTRY))

@@ -312,3 +312,60 @@ def lm_decode_step(cfg: ModelConfig, params: Params, token: jax.Array, t: jax.Ar
     table = params.get("lm_head", params["embed"])
     logits = layers.unembed(table, x)[:, 0]
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# family registrations — the decoder-only backbone serves every family whose
+# stack is a (possibly heterogeneous) scan of blocks; ``layer_plan`` picks
+# the block kinds (attention / moe / mamba / mLSTM / sLSTM) per family.
+# ---------------------------------------------------------------------------
+
+from repro.models.registry import ModelFamily, register_family  # noqa: E402
+
+
+class DecoderOnlyLM(ModelFamily):
+    """Token-in / logits-out decoder stack (dense backbone)."""
+
+    def init_params(self, cfg, key):
+        return lm_init(key, cfg)
+
+    def loss(self, cfg, params, batch, *, remat_policy="full"):
+        return lm_loss(cfg, params, batch, remat_policy=remat_policy)
+
+    def forward(self, cfg, params, batch, *, remat_policy="none", last_only=False):
+        logits, _ = lm_forward(cfg, params, batch, remat_policy=remat_policy,
+                               last_only=last_only)
+        return logits
+
+    def init_cache(self, cfg, params, batch_size, max_len, batch=None):
+        return lm_cache_init(cfg, batch_size, max_len)
+
+    def decode_step(self, cfg, params, token, t, caches):
+        return lm_decode_step(cfg, params, token, t, caches)
+
+
+class MoELM(DecoderOnlyLM):
+    """Routed-FFN variant; routing/EP live in ``repro.models.moe`` blocks."""
+
+
+class SSMLM(DecoderOnlyLM):
+    """xLSTM stack (mLSTM scan + unstacked sLSTM blocks, see ``xlstm.py``)."""
+
+
+class HybridLM(DecoderOnlyLM):
+    """Hymba-style attention+mamba hybrid (``ssm.py`` blocks)."""
+
+
+class VLM(DecoderOnlyLM):
+    """LM backbone over concatenated [vision_embeds; tokens] inputs."""
+
+    def extra_input_specs(self, cfg, batch_size):
+        return {"vision_embeds": jax.ShapeDtypeStruct(
+            (batch_size, cfg.n_vision_tokens, cfg.d_model), jnp.float32)}
+
+
+register_family("transformer", "dense")(DecoderOnlyLM())
+register_family("moe")(MoELM())
+register_family("ssm")(SSMLM())
+register_family("hybrid")(HybridLM())
+register_family("vlm")(VLM())

@@ -1,0 +1,13 @@
+"""The public lifecycle API: one session object per lifecycle.
+
+``TrainSession``     — config → recipe → mesh → state → jitted step → data →
+                       fault-tolerant checkpointed loop, in one object.
+``InferenceSession`` — params → prefill + ring-buffer decode → batched
+                       ``generate()``.
+
+Every driver (``launch/train``, ``launch/serve``, ``launch/dryrun``,
+``benchmarks/run``, the examples) composes exclusively through these.
+"""
+
+from repro.session.train import TrainSession  # noqa: F401
+from repro.session.infer import InferenceSession  # noqa: F401

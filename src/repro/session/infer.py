@@ -1,0 +1,152 @@
+"""``InferenceSession`` — the serving side of the recipe in one object.
+
+Owns the compute-dtype params, family-aware cache init (ring-buffer KV /
+SSM states / cross-KV), the jitted prefill and decode steps, and a batched
+greedy ``generate()``.  ``abstract=True`` composes over ShapeDtypeStructs
+and exposes ``lower_prefill`` / ``lower_decode`` for the dry-run's
+compile-only cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stepfn
+from repro.core.recipe import ParallelismConfig
+from repro.launch import plans as plans_mod
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+
+
+class InferenceSession:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 plan: Optional[ParallelismConfig] = None,
+                 mesh=None, abstract: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan if plan is not None else ParallelismConfig()
+        self.mesh = mesh
+        self.abstract = abstract
+        self.family = model_api.family_of(cfg)
+        self._serve_step = None
+        self._prefill: Dict[bool, Any] = {}
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_recipe(cls, arch: Union[str, ModelConfig], *,
+                    reduced: bool = False,
+                    plan: Optional[ParallelismConfig] = None,
+                    mesh=None, seed: int = 0,
+                    abstract: bool = False) -> "InferenceSession":
+        """Fresh (random-init) weights in compute dtype — the serving driver
+        and dry-run path."""
+        from repro.session.train import resolve_config
+        cfg = resolve_config(arch, reduced=reduced)
+
+        def mk(key):
+            p = model_api.init_params(cfg, key)
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(cfg.compute_dtype), p)
+
+        key = jax.random.PRNGKey(seed)
+        params = jax.eval_shape(mk, key) if abstract else mk(key)
+        return cls(cfg, params, plan=plan, mesh=mesh, abstract=abstract)
+
+    @classmethod
+    def from_params(cls, cfg: ModelConfig, params, *,
+                    plan: Optional[ParallelismConfig] = None,
+                    mesh=None) -> "InferenceSession":
+        """Adopt existing weights (e.g. ``TrainSession.to_inference()``)."""
+        return cls(cfg, params, plan=plan, mesh=mesh)
+
+    # ------------------------------------------------------------------
+    # serving steps
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int, batch=None):
+        """Family-aware decode caches; non-token inputs (encdec frames) are
+        stubbed through the family's ``serve_batch`` hook when absent."""
+        return model_api.init_cache(self.cfg, self.params, batch_size,
+                                    max_len, batch)
+
+    @property
+    def serve_step(self):
+        """Jitted one-token decode: (params, token, t, caches) → (next, caches)."""
+        if self._serve_step is None:
+            self._serve_step = jax.jit(
+                stepfn.make_serve_step(self.cfg, self.plan, self.mesh))
+        return self._serve_step
+
+    def prefill(self, batch, *, last_only: bool = True):
+        """Teacher-forced full-sequence forward (the prefill phase)."""
+        if last_only not in self._prefill:
+            self._prefill[last_only] = jax.jit(
+                stepfn.make_prefill(self.cfg, self.plan, self.mesh,
+                                    last_only=last_only))
+        return self._prefill[last_only](self.params, batch)
+
+    def generate(self, prompts, max_new_tokens: int) -> jax.Array:
+        """Batched greedy decode: teacher-force the prompt, then argmax.
+        Returns (B, prompt_len + max_new_tokens) token ids."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, P = prompts.shape
+        max_len = P + max_new_tokens
+        caches = self.init_cache(B, max_len)
+        out = [prompts[:, 0]]
+        tok = prompts[:, 0]
+        for t in range(max_len - 1):
+            nxt, caches = self.serve_step(self.params, tok, jnp.int32(t), caches)
+            tok = prompts[:, t + 1] if t + 1 < P else nxt
+            out.append(tok)
+            if len(out) >= max_len:
+                break
+        return jnp.stack(out, axis=1)
+
+    # ------------------------------------------------------------------
+    # dry-run (compile-only) lowering
+    # ------------------------------------------------------------------
+    def _require_abstract_mesh(self):
+        if not (self.abstract and self.mesh is not None):
+            raise RuntimeError("lowering needs abstract=True and a mesh")
+
+    def lower_prefill(self, batch_specs, *, last_only: bool = False):
+        """Lower the sharded prefill for abstract ``batch_specs``."""
+        self._require_abstract_mesh()
+        params_sh = plans_mod.serve_param_sharding(self.params, self.mesh)
+        batch_sh = stepfn.batch_shardings(batch_specs, self.mesh)
+        fn = stepfn.make_prefill(self.cfg, self.plan, self.mesh,
+                                 last_only=last_only)
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        return jitted.lower(self.params, batch_specs)
+
+    def lower_decode(self, batch_size: int, cache_len: int):
+        """Lower one sharded decode step against a ``cache_len`` cache."""
+        self._require_abstract_mesh()
+        params_sh = plans_mod.serve_param_sharding(self.params, self.mesh)
+        cache_shapes = jax.eval_shape(
+            lambda p: model_api.init_cache(self.cfg, p, batch_size, cache_len),
+            self.params)
+        cache_sh = plans_mod.cache_shardings(
+            cache_shapes, self.mesh, global_batch=batch_size, cache_len=cache_len)
+        tok = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+        t = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_sh = jax.NamedSharding(self.mesh, jax.sharding.PartitionSpec(
+            plans_mod.batch_sharding(self.mesh, batch_size)))
+        fn = stepfn.make_serve_step(self.cfg, self.plan, self.mesh)
+        jitted = jax.jit(fn, in_shardings=(params_sh, tok_sh, None, cache_sh),
+                         out_shardings=(tok_sh, cache_sh), donate_argnums=(3,))
+        return jitted.lower(self.params, tok, t, cache_shapes)
+
+    def prefill_input_specs(self, batch_size: int, seq_len: int) -> Dict[str, Any]:
+        """Abstract prefill batch: tokens + the family's extra inputs."""
+        specs = {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)}
+        specs.update(self.family.extra_input_specs(self.cfg, batch_size))
+        return specs
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        kind = "abstract" if self.abstract else "live"
+        return f"<InferenceSession {self.cfg.name} ({kind}) plan={self.plan}>"

@@ -1,0 +1,200 @@
+"""``TrainSession`` — the single object that owns a training lifecycle.
+
+It resolves the architecture config, applies the paper's recipe
+(``ParallelismConfig`` + ``RecipeAdvisor`` checks), builds the train state
+and its shardings, jits the train step, owns the deterministic data
+pipeline, and runs the fault-tolerant checkpointed loop.  The five drivers
+that used to re-compose these pieces by hand now all go through here.
+
+Typical use::
+
+    sess = TrainSession.from_recipe("granite_3_2b", reduced=True,
+                                    train_cfg=stepfn.TrainConfig(total_steps=50),
+                                    data_cfg=DataConfig(seq_len=128, global_batch=8))
+    out = sess.run(ckpt_dir="/tmp/ckpt")          # → {state, history, ...}
+    inf = sess.to_inference()                     # serve the trained weights
+
+``abstract=True`` builds the same composition over ``ShapeDtypeStruct``
+stand-ins (no memory, no compute) — the dry-run lowers/compiles from it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Union
+
+import jax
+import numpy as np
+
+from repro import configs as cfg_mod
+from repro.checkpoint.elastic import canonicalize_state
+from repro.core import stepfn
+from repro.core.recipe import ParallelismConfig, RecipeAdvisor
+from repro.data import DataConfig, make_dataset
+from repro.data.pipeline import add_modality_inputs
+from repro.models.config import ModelConfig
+from repro.runtime.train_loop import LoopConfig, run_training
+
+
+def resolve_config(arch: Union[str, ModelConfig], *, reduced: bool = False) -> ModelConfig:
+    cfg = cfg_mod.get_config(arch) if isinstance(arch, str) else arch
+    return cfg.reduced() if reduced else cfg
+
+
+class TrainSession:
+    def __init__(self, cfg: ModelConfig, *,
+                 plan: Optional[ParallelismConfig] = None,
+                 train_cfg: Optional[stepfn.TrainConfig] = None,
+                 data_cfg: Optional[DataConfig] = None,
+                 mesh=None, seed: int = 0,
+                 abstract: bool = False, donate: bool = True,
+                 advisor: Optional[RecipeAdvisor] = None):
+        self.cfg = cfg
+        self.plan = plan if plan is not None else ParallelismConfig()
+        self.train_cfg = train_cfg if train_cfg is not None else stepfn.TrainConfig()
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.abstract = abstract
+        if self.plan.pp > 1 and cfg.n_layers % self.plan.pp:
+            raise ValueError(
+                f"pp={self.plan.pp} does not divide n_layers={cfg.n_layers}")
+        # the paper's §7 checklist, evaluated once at composition time
+        self.advice: Dict[str, str] = (advisor or RecipeAdvisor()).check(self.plan)
+
+        key = jax.random.PRNGKey(seed)
+        if abstract:
+            self.state = jax.eval_shape(
+                lambda k: stepfn.init_state(cfg, self.plan, k, self.train_cfg), key)
+            self.train_step = None       # composed per-lowering in .lower()
+        else:
+            self.state = stepfn.init_state(cfg, self.plan, key, self.train_cfg)
+            if mesh is not None:
+                self.state = jax.device_put(
+                    self.state,
+                    stepfn.state_shardings(cfg, self.state, mesh, self.plan))
+            step = stepfn.make_train_step(cfg, self.plan, self.train_cfg, mesh)
+            self.train_step = jax.jit(step, donate_argnums=(0,) if donate else ())
+
+        self._dataset = None
+        self._batch_cache: Dict[int, Any] = {}
+        self._eval_step = None
+        self._next_step = 0
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_recipe(cls, arch: Union[str, ModelConfig], *,
+                    reduced: bool = False,
+                    plan: Optional[ParallelismConfig] = None,
+                    train_cfg: Optional[stepfn.TrainConfig] = None,
+                    data_cfg: Optional[DataConfig] = None,
+                    mesh=None, seed: int = 0,
+                    abstract: bool = False, donate: bool = True) -> "TrainSession":
+        """The one public entry point: architecture name (or config) + recipe
+        → a fully-composed training session."""
+        cfg = resolve_config(arch, reduced=reduced)
+        return cls(cfg, plan=plan, train_cfg=train_cfg, data_cfg=data_cfg,
+                   mesh=mesh, seed=seed, abstract=abstract, donate=donate)
+
+    # ------------------------------------------------------------------
+    # data pipeline (deterministic, resumable: batch = f(seed, step))
+    # ------------------------------------------------------------------
+    @property
+    def dataset(self):
+        if self._dataset is None:
+            if self.abstract:
+                raise RuntimeError("abstract sessions have no data pipeline")
+            dc = self.data_cfg or DataConfig(seq_len=256, global_batch=32)
+            self._dataset = make_dataset(dc, self.cfg)
+        return self._dataset
+
+    def batches(self, step: int):
+        """Batch for ``step`` with modality inputs attached (one-slot cache —
+        the restart path may re-request the same step)."""
+        if step not in self._batch_cache:
+            self._batch_cache.clear()
+            b = self.dataset.batch(step)
+            self._batch_cache[step] = add_modality_inputs(
+                b, self.cfg, step, self.dataset.cfg.seed)
+        return self._batch_cache[step]
+
+    # ------------------------------------------------------------------
+    # stepping / running
+    # ------------------------------------------------------------------
+    def step(self, batch=None):
+        """One optimizer step; pulls the next pipeline batch when none given."""
+        if self.abstract:
+            raise RuntimeError("abstract sessions cannot step; use .lower()")
+        if batch is None:
+            batch = self.batches(self._next_step)
+        self.state, metrics = self.train_step(self.state, batch)
+        self._next_step += 1
+        return metrics
+
+    def run(self, steps: Optional[int] = None, *,
+            ckpt_dir=None, ckpt_every: int = 50,
+            log_every: Optional[int] = None, keep_ckpts: int = 3,
+            async_ckpt: bool = True, fail_at_step: Optional[int] = None,
+            log=print) -> Dict[str, Any]:
+        """Fault-tolerant training to ``steps`` (default: the schedule length):
+        restore → train → periodic atomic checkpoint → preemption handling."""
+        if self.abstract:
+            raise RuntimeError("abstract sessions cannot run; use .lower()")
+        if self._next_step:
+            raise RuntimeError(
+                "run() restarts the data schedule at step 0 — don't mix manual "
+                "step() with run() in one session; use a fresh session (resume "
+                "happens via ckpt_dir) or keep stepping manually")
+        total = steps if steps is not None else self.train_cfg.total_steps
+        loop_cfg = LoopConfig(
+            total_steps=total, ckpt_every=ckpt_every,
+            ckpt_dir=str(ckpt_dir) if ckpt_dir else None,
+            log_every=log_every if log_every is not None else max(1, total // 20),
+            keep_ckpts=keep_ckpts, async_ckpt=async_ckpt)
+        out = run_training(self.state, self.train_step, self.batches, loop_cfg,
+                           plan=self.plan, log=log, fail_at_step=fail_at_step)
+        self.state = out["state"]
+        self._next_step = total
+        return out
+
+    def evaluate(self, batch):
+        """Loss/metrics on one batch without touching optimizer state."""
+        if self._eval_step is None:
+            self._eval_step = jax.jit(
+                stepfn.make_eval_step(self.cfg, self.plan, self.mesh))
+        return self._eval_step(self.state["params"], batch)
+
+    # ------------------------------------------------------------------
+    # hand-offs
+    # ------------------------------------------------------------------
+    def lower(self, batch_specs):
+        """Abstract-mode: lower the sharded train step for ``batch_specs``
+        on this session's mesh (the dry-run's compile-only path)."""
+        if not (self.abstract and self.mesh is not None):
+            raise RuntimeError("lower() needs abstract=True and a mesh")
+        state_sh = stepfn.state_shardings(self.cfg, self.state, self.mesh, self.plan)
+        batch_sh = stepfn.batch_shardings(batch_specs, self.mesh)
+        step = stepfn.make_train_step(self.cfg, self.plan, self.train_cfg, self.mesh)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jitted.lower(self.state, batch_specs)
+
+    def to_inference(self, *, plan: Optional[ParallelismConfig] = None,
+                     mesh=None) -> "InferenceSession":
+        """Hand the trained weights to serving (canonical layer layout,
+        compute-dtype cast)."""
+        from repro.session.infer import InferenceSession
+        params = canonicalize_state(self.state, self.plan)["params"]
+        params = jax.tree_util.tree_map(
+            lambda x: x.astype(self.cfg.compute_dtype), params)
+        return InferenceSession.from_params(self.cfg, params, plan=plan, mesh=mesh)
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(self.state["params"]))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        kind = "abstract" if self.abstract else "live"
+        return (f"<TrainSession {self.cfg.name} ({kind}) plan={self.plan} "
+                f"params={self.n_params / 1e6:.1f}M>")
