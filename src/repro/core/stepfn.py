@@ -178,6 +178,71 @@ def make_prefill(cfg: ModelConfig, plan: ParallelismConfig,
     return prefill
 
 
+def make_prefill_cache(cfg: ModelConfig, plan: ParallelismConfig,
+                       mesh: Optional[Mesh] = None):
+    """Serving prompt ingestion: the family prefill that also populates the
+    decode caches.  (params, batch, caches) → (last-position logits (B, V),
+    caches).  One jit covers all prompt lengths (retrace per shape)."""
+    mapping = axis_mapping(plan)
+
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def prefill_cache(params, batch, caches):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            return model_api.prefill_cache(cfg, params, batch, caches)
+
+    return prefill_cache
+
+
+def make_slot_serve_step(cfg: ModelConfig, plan: ParallelismConfig,
+                         mesh: Optional[Mesh] = None):
+    """Continuous-batching decode: like ``make_serve_step`` but every slot
+    (batch row) carries its OWN position ``ts[i]``, so requests at different
+    depths decode together in one full-width step.  Implemented by vmapping
+    the single-request decode over the family's cache slot axes — no family
+    has to know about mixed-position batches."""
+    mapping = axis_mapping(plan)
+
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def slot_serve_step(params, tokens, ts, caches):
+        axes = model_api.cache_slot_axes(cfg, caches)
+
+        def one(tok, t, cache):
+            cache = jax.tree_util.tree_map(
+                lambda x, a: jnp.expand_dims(x, a), cache, axes)
+            logits, cache = model_api.decode_step(cfg, params, tok[None], t, cache)
+            cache = jax.tree_util.tree_map(
+                lambda x, a: jnp.squeeze(x, axis=a), cache, axes)
+            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            return jax.vmap(one, in_axes=(0, 0, axes),
+                            out_axes=(0, axes))(tokens, ts, caches)
+
+    return slot_serve_step
+
+
+def cache_take_slot(cfg: ModelConfig, caches, i):
+    """Slice request slot ``i`` out of batched decode caches (slot-width 1)."""
+    axes = model_api.cache_slot_axes(cfg, caches)
+    return jax.tree_util.tree_map(
+        lambda x, a: jax.lax.dynamic_slice_in_dim(x, i, 1, axis=a), caches, axes)
+
+
+def cache_insert_slot(cfg: ModelConfig, caches, slot_caches, i):
+    """Write slot-width-1 ``slot_caches`` (a fresh prefill, or a reset) into
+    slot ``i`` of batched caches — finished requests free their slot and
+    queued requests are admitted mid-flight through here."""
+    axes = model_api.cache_slot_axes(cfg, caches)
+    return jax.tree_util.tree_map(
+        lambda x, s, a: jax.lax.dynamic_update_slice_in_dim(
+            x, s.astype(x.dtype), i, axis=a),
+        caches, slot_caches, axes)
+
+
 class _null_ctx:
     def __enter__(self):
         return None

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ops
+
 NEG_INF = -1e30
 
 
@@ -93,7 +95,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, kpos: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=ops.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(t_arr, qh, k, v, kpos)

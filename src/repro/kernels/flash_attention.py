@@ -122,6 +122,6 @@ def _scratch(bq: int, D: int):
 
 
 def _compiler_params():
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.CompilerParams(
+    from repro.kernels.ops import tpu_compiler_params
+    return tpu_compiler_params(
         dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))

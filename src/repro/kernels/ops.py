@@ -12,6 +12,17 @@ from repro.kernels import ref
 from repro.runtime import flags
 
 
+def tpu_compiler_params(**kwargs):
+    """Version-compat shim: ``pltpu.TPUCompilerParams`` (jax <= 0.4.x) was
+    renamed ``pltpu.CompilerParams`` upstream.  Kernels build their compiler
+    params through here so they run on either side of the rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None) -> jax.Array:
     from repro.kernels import flash_attention as fa

@@ -149,15 +149,16 @@ def _parse_module(hlo: str) -> Tuple[Dict[str, "_Comp"], Optional[str], Dict[str
 
 
 def _operand_names(line: str) -> List[str]:
-    # operands are inside the first (...) after the op kind
+    # operands are inside the first (...) after the op kind; each is printed
+    # either bare ("%name") or with its shape prefix ("f32[...]{...} %name")
     m = re.search(r"[\w\-]+\(([^)]*)\)", line.split("=", 1)[-1])
     if not m:
         return []
     out = []
     for tok in m.group(1).split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
+        nm = re.search(r"%([\w.\-]+)", tok)
+        if nm:
+            out.append(nm.group(1))
     return out
 
 

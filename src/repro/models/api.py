@@ -53,6 +53,16 @@ def decode_step(cfg: ModelConfig, params, token: jax.Array, t: jax.Array, caches
     return family_of(cfg).decode_step(cfg, params, token, t, caches)
 
 
+def prefill_cache(cfg: ModelConfig, params, batch: Dict[str, jax.Array], caches):
+    """Ingest a prompt into decode caches → (last-position logits, caches)."""
+    return family_of(cfg).prefill_cache(cfg, params, batch, caches)
+
+
+def cache_slot_axes(cfg: ModelConfig, caches):
+    """Pytree of ints: the request ('slot') axis of every cache leaf."""
+    return family_of(cfg).cache_slot_axes(cfg, caches)
+
+
 class Model:
     """Convenience OO wrapper used by examples and the serving loop."""
 

@@ -182,6 +182,40 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Ar
     return out @ p["wo"].astype(dt)
 
 
+def attention_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                      cache: Dict[str, jax.Array], *, window: Optional[int] = None):
+    """Full-sequence causal self-attention that also writes the prompt's
+    post-RoPE K/V into the ring cache — the prefill half of serving, one
+    parallel forward instead of a per-token decode loop.  Only the last
+    ``size`` positions are scattered (slot = pos % size is unique there), so
+    ring overwrites stay deterministic.  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    hd, dt = cfg.hd, x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = sdpa(q, k, v, None, causal=True, window=window)
+    size = cache["k"].shape[1]
+    keep = min(S, size)
+    slots = positions[:, S - keep:] % size
+    bidx = jnp.arange(B)[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slots].set(k[:, S - keep:].astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slots].set(v[:, S - keep:].astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slots].set(positions[:, S - keep:]),
+    }
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return out @ p["wo"].astype(dt), new_cache
+
+
 # ---------------------------------------------------------------------------
 # decode path (single new token against a KV cache)
 # ---------------------------------------------------------------------------

@@ -203,6 +203,10 @@ class EncDecFamily(ModelFamily):
         return {"frames": jnp.zeros((batch_size, cfg.enc_frames, cfg.d_model),
                                     jnp.float32)}
 
+    def cache_slot_axes(self, cfg, caches):
+        # both self-KV rings and precomputed cross-KV are stacked (L, B, ...)
+        return jax.tree_util.tree_map(lambda _: 1, caches)
+
     def extra_input_specs(self, cfg, batch_size):
         return {"frames": jax.ShapeDtypeStruct(
             (batch_size, cfg.enc_frames, cfg.d_model), jnp.float32)}

@@ -64,6 +64,35 @@ class ModelFamily:
         token-only families; encdec returns stub encoder frames)."""
         return None
 
+    def prefill_cache(self, cfg: ModelConfig, params, batch: Dict[str, Any], caches):
+        """Ingest a full prompt into ``caches``; returns (last-position
+        logits ``(B, V)``, caches).  Default: one jit-able ``lax.scan`` of
+        ``decode_step`` over the prompt — exact decode semantics for
+        recurrent/state caches (SSM, sLSTM, cross-KV) at one compile.
+        Attention-backed families override with a parallel prefill that
+        computes the prompt's K/V in a single teacher-forced forward."""
+        import jax
+        import jax.numpy as jnp
+        tokens = batch["tokens"]
+        ts = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def step(c, tok_t):
+            tok, t = tok_t
+            logits, c = self.decode_step(cfg, params, tok, t, c)
+            return c, logits
+
+        caches, logits = jax.lax.scan(step, caches, (tokens.T, ts))
+        return logits[-1], caches
+
+    def cache_slot_axes(self, cfg: ModelConfig, caches):
+        """Per-leaf request ('slot') axis of the decode caches — the axis the
+        continuous-batching scheduler vmaps the per-slot decode over and
+        inserts/resets per-request caches along.  Default: axis 0 on every
+        leaf (plain state caches); stacked-layer layouts override (the
+        decoder stacks put the layer dim first, so their slot axis is 1)."""
+        import jax
+        return jax.tree_util.tree_map(lambda _: 0, caches)
+
     def extra_input_specs(self, cfg: ModelConfig, batch_size: int) -> Dict[str, Any]:
         """ShapeDtypeStructs for the family's non-token prefill inputs
         (used by the dry-run to build abstract batch specs)."""

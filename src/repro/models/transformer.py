@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.core import sharding
 from repro.models import layers, moe as moe_mod, ssm as ssm_mod, xlstm as xlstm_mod
 from repro.models.attention import (attention_init, attention_apply,
-                                    attention_decode, cache_init)
+                                    attention_decode, attention_prefill,
+                                    cache_init)
 from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
@@ -241,6 +242,56 @@ def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     return loss, {"xent": xent, "aux": aux}
 
 
+def block_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+                  cache, *, kind: str, window):
+    """``block_apply`` + ring-cache population (serving prefill).  Only the
+    dense attention kind routes here; MoE (per-token capacity routing) and
+    recurrent kinds use the family's decode-scan fallback."""
+    assert kind == "dense", kind
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    h, cache = attention_prefill(cfg, p["attn"], h, positions, cache, window=window)
+    x = x + h
+    x = sharding.constrain(x, "batch", "seq", None)
+    h = layers.norm_apply(cfg.norm, p["norm2"], x)
+    x = x + layers.mlp_apply(p["mlp"], h, gated=cfg.gated_mlp, act=cfg.act)
+    return sharding.constrain(x, "batch", "seq", None), cache
+
+
+def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], caches):
+    """``lm_forward(last_only=True)`` that also fills the decode caches with
+    the prompt's K/V: prompt ingestion becomes one parallel teacher-forced
+    forward.  Returns (last-position logits ``(B, V)``, caches)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = sharding.constrain(x, "batch", "seq", None)
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    new_caches = dict(caches)
+
+    if pre:
+        newpre = []
+        for (idx, kind), bp, c in zip(pre, params.get("pre_blocks", []), caches["pre"]):
+            x, c = block_prefill(cfg, bp, x, positions, c, kind=kind,
+                                 window=cfg.swa_window)
+            newpre.append(c)
+        new_caches["pre"] = newpre
+
+    if n_scanned:
+        def step(x, bc):
+            bp, c = bc
+            x, c = block_prefill(cfg, bp, x, positions, c, kind=scanned_kind,
+                                 window=cfg.swa_window)
+            return x, c
+
+        x, newc = jax.lax.scan(step, x, (params["blocks"], caches["blocks"]))
+        new_caches["blocks"] = newc
+
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x[:, -1:])
+    table = params.get("lm_head", params["embed"])
+    logits = layers.unembed(table, x)
+    return logits[:, 0], new_caches
+
+
 # ---------------------------------------------------------------------------
 # decode (one token against caches)
 # ---------------------------------------------------------------------------
@@ -342,6 +393,27 @@ class DecoderOnlyLM(ModelFamily):
 
     def decode_step(self, cfg, params, token, t, caches):
         return lm_decode_step(cfg, params, token, t, caches)
+
+    def prefill_cache(self, cfg, params, batch, caches):
+        scanned_kind, _, pre = layer_plan(cfg)
+        # Parallel prefill only for pure-attention stacks.  MoE routes per
+        # token under capacity limits, so a full-sequence forward drops
+        # different tokens than step-by-step decode; recurrent/hybrid kinds
+        # have state caches a forward pass never materializes.  Those use the
+        # decode-scan fallback (exact decode semantics, one compile).
+        if scanned_kind == "dense" and all(k == "dense" for _, k in pre):
+            return lm_prefill(cfg, params, batch, caches)
+        return super().prefill_cache(cfg, params, batch, caches)
+
+    def cache_slot_axes(self, cfg, caches):
+        axes: Dict[str, Any] = {}
+        if "pre" in caches:
+            axes["pre"] = jax.tree_util.tree_map(lambda _: 0, caches["pre"])
+        if "blocks" in caches:   # stacked (L, B, ...) — slot axis after layers
+            axes["blocks"] = jax.tree_util.tree_map(lambda _: 1, caches["blocks"])
+        if "hymba" in caches:
+            axes["hymba"] = jax.tree_util.tree_map(lambda _: 0, caches["hymba"])
+        return axes
 
 
 class MoELM(DecoderOnlyLM):

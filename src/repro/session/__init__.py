@@ -2,8 +2,9 @@
 
 ``TrainSession``     — config → recipe → mesh → state → jitted step → data →
                        fault-tolerant checkpointed loop, in one object.
-``InferenceSession`` — params → prefill + ring-buffer decode → batched
-                       ``generate()``.
+``InferenceSession`` — params → cache-populating prefill + ring-buffer
+                       decode → batched ``generate()`` / continuous-batching
+                       ``serve()``.
 
 Every driver (``launch/train``, ``launch/serve``, ``launch/dryrun``,
 ``benchmarks/run``, the examples) composes exclusively through these.
@@ -11,3 +12,5 @@ Every driver (``launch/train``, ``launch/serve``, ``launch/dryrun``,
 
 from repro.session.train import TrainSession  # noqa: F401
 from repro.session.infer import InferenceSession  # noqa: F401
+from repro.session.scheduler import (  # noqa: F401
+    ContinuousBatchingScheduler, Request, RequestQueue, ServingStats)

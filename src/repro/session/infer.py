@@ -2,14 +2,17 @@
 
 Owns the compute-dtype params, family-aware cache init (ring-buffer KV /
 SSM states / cross-KV), the jitted prefill and decode steps, and a batched
-greedy ``generate()``.  ``abstract=True`` composes over ShapeDtypeStructs
-and exposes ``lower_prefill`` / ``lower_decode`` for the dry-run's
-compile-only cells.
+greedy ``generate()``: prompts are ingested through the cache-populating
+prefill (one teacher-forced forward for attention stacks, one decode scan
+for recurrent ones) and mixed-length workloads delegate to the
+continuous-batching scheduler (``repro.session.scheduler``).
+``abstract=True`` composes over ShapeDtypeStructs and exposes
+``lower_prefill`` / ``lower_decode`` for the dry-run's compile-only cells.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Union
+from typing import Any, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +36,10 @@ class InferenceSession:
         self.family = model_api.family_of(cfg)
         self._serve_step = None
         self._prefill: Dict[bool, Any] = {}
+        self._prefill_cache_step = None
+        self._slot_step = None
+        self._insert_slot = None
+        self.last_stats = None  # ServingStats of the most recent serve()
 
     # ------------------------------------------------------------------
     # construction
@@ -77,6 +84,8 @@ class InferenceSession:
     def serve_step(self):
         """Jitted one-token decode: (params, token, t, caches) → (next, caches)."""
         if self._serve_step is None:
+            # NOT donated: callers may legitimately step twice from one
+            # caches state (the new slot_step, scheduler-only, does donate)
             self._serve_step = jax.jit(
                 stepfn.make_serve_step(self.cfg, self.plan, self.mesh))
         return self._serve_step
@@ -89,22 +98,111 @@ class InferenceSession:
                                     last_only=last_only))
         return self._prefill[last_only](self.params, batch)
 
-    def generate(self, prompts, max_new_tokens: int) -> jax.Array:
-        """Batched greedy decode: teacher-force the prompt, then argmax.
-        Returns (B, prompt_len + max_new_tokens) token ids."""
+    @property
+    def prefill_cache_step(self):
+        """Jitted cache-populating prefill:
+        (params, batch, caches) → (last-position logits (B, V), caches)."""
+        if self._prefill_cache_step is None:
+            self._prefill_cache_step = jax.jit(
+                stepfn.make_prefill_cache(self.cfg, self.plan, self.mesh))
+        return self._prefill_cache_step
+
+    @property
+    def slot_step(self):
+        """Jitted per-slot-position decode (continuous batching):
+        (params, tokens (B,), ts (B,), caches) → (next (B,), caches)."""
+        if self._slot_step is None:
+            self._slot_step = jax.jit(
+                stepfn.make_slot_serve_step(self.cfg, self.plan, self.mesh),
+                donate_argnums=(3,))   # caches are reassigned every step
+        return self._slot_step
+
+    @property
+    def insert_slot(self):
+        """Jitted slot insert: (caches, slot_caches, i) → caches with the
+        width-1 ``slot_caches`` written into request slot ``i``."""
+        if self._insert_slot is None:
+            cfg = self.cfg
+            self._insert_slot = jax.jit(
+                lambda caches, slot, i: stepfn.cache_insert_slot(
+                    cfg, caches, slot, i))
+        return self._insert_slot
+
+    def generate(self, prompts, max_new_tokens, *,
+                 stop_token: Optional[int] = None,
+                 n_slots: Optional[int] = None):
+        """Greedy decode.
+
+        Uniform mode (2-D ``prompts`` array + int ``max_new_tokens``): one
+        batched cache-populating prefill ingests the prompts, then argmax
+        decode — returns ``(B, prompt_len + max_new_tokens)`` token ids
+        (after ``stop_token`` a row is padded with it).
+
+        Mixed-length mode (a list of prompts, or per-request
+        ``max_new_tokens``): delegates to the continuous-batching scheduler
+        and returns a list of per-request 1-D token arrays (stats land in
+        ``self.last_stats``)."""
+        if isinstance(prompts, (list, tuple)) or \
+                isinstance(max_new_tokens, (list, tuple)):
+            outs, _ = self.serve(prompts, max_new_tokens,
+                                 stop_token=stop_token, n_slots=n_slots)
+            return outs
         prompts = jnp.asarray(prompts, jnp.int32)
+        if max_new_tokens <= 0:
+            return prompts
         B, P = prompts.shape
         max_len = P + max_new_tokens
         caches = self.init_cache(B, max_len)
-        out = [prompts[:, 0]]
-        tok = prompts[:, 0]
-        for t in range(max_len - 1):
-            nxt, caches = self.serve_step(self.params, tok, jnp.int32(t), caches)
-            tok = prompts[:, t + 1] if t + 1 < P else nxt
-            out.append(tok)
-            if len(out) >= max_len:
+        logits, caches = self.prefill_cache_step(
+            self.params, {"tokens": prompts}, caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cols = [prompts, tok[:, None]]
+        done = (tok == stop_token) if stop_token is not None else None
+        for t in range(P, max_len - 1):
+            if done is not None and bool(done.all()):
+                cols.append(jnp.full((B, max_len - 1 - t), stop_token, jnp.int32))
                 break
-        return jnp.stack(out, axis=1)
+            nxt, caches = self.serve_step(self.params, tok, jnp.int32(t), caches)
+            if done is not None:
+                nxt = jnp.where(done, jnp.int32(stop_token), nxt)
+                done = done | (nxt == stop_token)
+            tok = nxt
+            cols.append(tok[:, None])
+        return jnp.concatenate(cols, axis=1)
+
+    def serve(self, prompts: Sequence, max_new_tokens, *,
+              stop_token: Optional[int] = None,
+              n_slots: Optional[int] = None,
+              max_len: Optional[int] = None):
+        """Continuous-batching serve of a mixed-length request set.
+        Returns (list of per-request 1-D token arrays in submit order,
+        ``ServingStats``)."""
+        import numpy as np
+        from repro.session.scheduler import (ContinuousBatchingScheduler,
+                                             RequestQueue, ServingStats)
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        if isinstance(max_new_tokens, (list, tuple)):
+            mnt = [int(m) for m in max_new_tokens]
+        else:
+            mnt = [int(max_new_tokens)] * len(prompts)
+        if len(mnt) != len(prompts):
+            raise ValueError(
+                f"{len(prompts)} prompts but {len(mnt)} max_new_tokens")
+        if not prompts:
+            self.last_stats = ServingStats()
+            return [], self.last_stats
+        if n_slots is None:
+            n_slots = min(4, len(prompts))
+        if max_len is None:
+            max_len = max(len(p) + m for p, m in zip(prompts, mnt))
+        queue = RequestQueue()
+        rids = [queue.submit(p, m, stop_token=stop_token)
+                for p, m in zip(prompts, mnt)]
+        sched = ContinuousBatchingScheduler(self, n_slots=n_slots,
+                                            max_len=max_len)
+        outputs, stats = sched.run(queue)
+        self.last_stats = stats
+        return [outputs[r] for r in rids], stats
 
     # ------------------------------------------------------------------
     # dry-run (compile-only) lowering
