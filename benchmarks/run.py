@@ -17,8 +17,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 def kernel_microbench():
     """Wall-time micro-bench of the Pallas kernels (interpret mode on CPU —
-    the numbers are correctness-path timings, not TPU performance)."""
+    the numbers are correctness-path timings, not TPU performance).
+
+    Since the flash kernel grew its fused backward (custom_vjp), the hot-path
+    comparison is fwd+bwd — one jitted ``value_and_grad`` per path, flash vs
+    the einsum oracle, S ∈ {512, 2048, 8192}.  Rows land in
+    ``BENCH_kernels.json`` so the perf trajectory has data points."""
+    import json
     import time
+    from pathlib import Path
+
     import jax
     import jax.numpy as jnp
     from repro.kernels import ref
@@ -26,10 +34,12 @@ def kernel_microbench():
 
     rows = []
     key = jax.random.PRNGKey(0)
-    B, S, H, D = 1, 512, 4, 64
-    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
-    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D), jnp.float32)
-    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D), jnp.float32)
+
+    def qkv(B, S, H, D):
+        q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D), jnp.float32)
+        return q, k, v
 
     def timeit(fn, n=3):
         fn()  # compile
@@ -38,12 +48,55 @@ def kernel_microbench():
             jax.block_until_ready(fn())
         return (time.perf_counter() - t0) / n * 1e6
 
+    B, S, H, D = 1, 512, 4, 64
+    q, k, v = qkv(B, S, H, D)
     t_ref = timeit(lambda: ref.mha_reference(q, k, v, causal=True))
     rows.append(("kernels/mha_oracle_xla", t_ref, f"S={S} H={H} D={D}"))
     t_pl = timeit(lambda: flash_attention(q, k, v, causal=True, bq=128, bk=128,
                                           interpret=True), n=1)
     rows.append(("kernels/flash_pallas_interpret", t_pl,
                  "interpret-mode (correctness path, not TPU perf)"))
+
+    # --- training hot path: fwd + fused bwd, flash vs reference autodiff ---
+    bench = {"suite": "kernels_fwdbwd", "B": 1, "H": 2, "D": 64,
+             "mode": "interpret" if jax.default_backend() == "cpu" else "tpu",
+             "rows": []}
+    for S in (512, 2048, 8192):
+        B, H, D = bench["B"], bench["H"], bench["D"]
+        q, k, v = qkv(B, S, H, D)
+        bq = min(512, S)
+
+        def loss_fl(q, k, v, _bq=bq):
+            return flash_attention(q, k, v, causal=True, bq=_bq, bk=_bq,
+                                   interpret=jax.default_backend() == "cpu").sum()
+
+        def loss_rf(q, k, v):
+            return ref.mha_reference(q, k, v, causal=True).astype(jnp.float32).sum()
+
+        f_fl = jax.jit(jax.value_and_grad(loss_fl, argnums=(0, 1, 2)))
+        f_rf = jax.jit(jax.value_and_grad(loss_rf, argnums=(0, 1, 2)))
+        jax.block_until_ready(f_fl(q, k, v))     # compile
+        jax.block_until_ready(f_rf(q, k, v))
+        # noisy shared hosts: interleave reps so load spikes hit both paths,
+        # then take each path's min (the undisturbed run)
+        ts_fl, ts_rf = [], []
+        for _ in range(3 if S <= 2048 else 2):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_fl(q, k, v))
+            ts_fl.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_rf(q, k, v))
+            ts_rf.append(time.perf_counter() - t0)
+        t_fl, t_rf = min(ts_fl) * 1e6, min(ts_rf) * 1e6
+        speedup = t_rf / t_fl
+        rows.append((f"kernels/flash_fwdbwd_S{S}", t_fl,
+                     f"bq=bk={bq}; {speedup:.2f}x vs ref"))
+        rows.append((f"kernels/ref_fwdbwd_S{S}", t_rf, "einsum autodiff (S^2)"))
+        bench["rows"].append({"S": S, "bq": bq, "flash_us": round(t_fl, 1),
+                              "ref_us": round(t_rf, 1),
+                              "speedup": round(speedup, 3)})
+    out = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+    out.write_text(json.dumps(bench, indent=1) + "\n")
     return rows
 
 

@@ -52,21 +52,38 @@ def active_params(cfg: ModelConfig) -> int:
     return n - all_expert + act_expert
 
 
-def model_flops_per_token(cfg: ModelConfig, seq: int) -> float:
-    """Useful fwd+bwd FLOPs per token: 6·N_active + causal attention term."""
+# Flash-trained attention recomputes the score tiles in the backward pass.
+# Our split-sweep kernels (dQ with K innermost, dK/dV with Q innermost) each
+# recompute S and dP, so backward is 7 tile-matmuls (2·S, 2·dP, dQ, dK, dV)
+# vs autodiff's 4 — attention fwd+bwd goes from 6 to 9 units: 1.5×.
+FLASH_BWD_ATTN_MULT = 1.5
+
+
+def model_flops_per_token(cfg: ModelConfig, seq: int, *,
+                          flash_backward: bool = False) -> float:
+    """Useful fwd+bwd FLOPs per token: 6·N_active + causal attention term.
+
+    ``flash_backward=True`` models the fused flash backward (the default
+    training path on TPU): the split-sweep recompute brings attention
+    fwd+bwd from 6 to 9 matmul units (``FLASH_BWD_ATTN_MULT`` = 1.5) — the
+    same accounting ``hlo_analysis.flash_attention_flops`` credits to the
+    compiled kernels."""
     n = active_params(cfg)
     w = min(cfg.swa_window or seq, seq)
     attn = 6.0 * cfg.n_layers * cfg.n_heads * cfg.hd * w  # 12·d_attn·s, halved causal
     if cfg.family == "ssm":
         attn = 0.0
+    if flash_backward:
+        attn *= FLASH_BWD_ATTN_MULT
     return 6.0 * n + attn
 
 
 def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
                   system: System = TPU_V5E, seq: int = 2048,
-                  dp_overlap: float = 0.6) -> StepCost:
+                  dp_overlap: float = 0.6,
+                  flash_backward: bool = False) -> StepCost:
     tokens_replica = plan.mbs * plan.gas * seq
-    fpt = model_flops_per_token(cfg, seq)
+    fpt = model_flops_per_token(cfg, seq, flash_backward=flash_backward)
     flops_replica = fpt * tokens_replica
     remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[plan.remat_policy]
 

@@ -32,6 +32,8 @@ class ParallelismConfig:
     gather_params_once: bool = False  # beyond-paper: ZeRO-3 + pipeline — cast
     # params to bf16 and all-gather them ONCE per step instead of letting XLA
     # re-gather the fp32 masters inside every pipeline superstep.
+    flash_bq: Optional[int] = None    # flash-attention Q/K block-size override
+    flash_bk: Optional[int] = None    # (autotuning hook; None → 128/64 heuristic)
 
     @property
     def world(self) -> int:

@@ -105,11 +105,48 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
 
     n_groups = plan.dp * plan.pods if mesh is not None else 1
 
+    def grads_and_metrics(params, batch):
+        """(loss, metrics, grads), honoring ``plan.gas`` on the pp=1 path.
+
+        The pipeline folds GAS into its superstep schedule
+        (``pipeline_loss``); without a pipeline we scan over micro-batches
+        and accumulate gradients in the compute dtype (the paper's Table-1
+        "2 B" bf16 gradient buffer), so ``RecipeAdvisor.suggest``'s
+        ``min_gas=8`` plans train the effective batch they claim instead of
+        silently collapsing to one big micro-batch."""
+        if plan.pp > 1 or plan.gas <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        gas = plan.gas
+
+        def to_micro(x):
+            if x.shape[0] % gas:
+                raise ValueError(
+                    f"batch dim {x.shape[0]} not divisible by gas={gas}")
+            return x.reshape(gas, x.shape[0] // gas, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(to_micro, batch)
+        acc_dt = cfg.compute_dtype
+
+        def one(g_acc, mb):
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, gi: a + gi.astype(a.dtype), g_acc, g)
+            return g_acc, (loss, metrics)
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        g_acc, (losses, metricses) = jax.lax.scan(one, g0, micro)
+        grads = jax.tree_util.tree_map(lambda g: g / gas, g_acc)
+        metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), metricses)
+        return jnp.mean(losses), metrics, grads
+
     def train_step(state, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
-        with ctx, moe_groups(n_groups):
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state["params"], batch)
+        with ctx, _flash_ctx(plan), moe_groups(n_groups):
+            loss, metrics, grads = grads_and_metrics(state["params"], batch)
             grads, ef = apply_compression(grads, train_cfg.compression, state.get("ef"))
             if mesh is not None and plan.zero_stage >= 2:
                 p_sh = zero.param_shardings(cfg, state["params"], mesh, plan)
@@ -135,7 +172,7 @@ def make_eval_step(cfg: ModelConfig, plan: ParallelismConfig,
 
     def eval_step(params, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
-        with ctx:
+        with ctx, _flash_ctx(plan):
             loss, metrics = model_api.loss_fn(cfg, params, batch, remat_policy="none")
         return metrics
 
@@ -170,7 +207,7 @@ def make_prefill(cfg: ModelConfig, plan: ParallelismConfig,
 
     def prefill(params, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
-        with ctx, moe_groups(n_groups):
+        with ctx, _flash_ctx(plan), moe_groups(n_groups):
             logits = model_api.forward(cfg, params, batch, remat_policy="none",
                                        last_only=last_only)
         return logits
@@ -189,7 +226,7 @@ def make_prefill_cache(cfg: ModelConfig, plan: ParallelismConfig,
 
     def prefill_cache(params, batch, caches):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
-        with ctx, moe_groups(n_groups):
+        with ctx, _flash_ctx(plan), moe_groups(n_groups):
             return model_api.prefill_cache(cfg, params, batch, caches)
 
     return prefill_cache
@@ -241,6 +278,16 @@ def cache_insert_slot(cfg: ModelConfig, caches, slot_caches, i):
         lambda x, s, a: jax.lax.dynamic_update_slice_in_dim(
             x, s.astype(x.dtype), i, axis=a),
         caches, slot_caches, axes)
+
+
+def _flash_ctx(plan: ParallelismConfig):
+    """Thread the recipe's flash block-size override (autotuning hook) down
+    to ``kernels.ops`` for the duration of a step trace."""
+    if plan.flash_bq or plan.flash_bk:
+        from repro.runtime import flags
+        return flags.flag_ctx(flash_block_q=plan.flash_bq,
+                              flash_block_k=plan.flash_bk)
+    return _null_ctx()
 
 
 class _null_ctx:

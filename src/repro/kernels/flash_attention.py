@@ -4,10 +4,26 @@ the K/V index map (no materialized head repeat).
 
 TPU adaptation (DESIGN.md §2): the GPU flash kernel tunes for SRAM/warps; here
 the block shape is chosen for VMEM (≤ ~2 MB working set/step) and the MXU —
-q/k blocks are multiples of 128 in the sequence dims, D stays whole (head dims
-here: 64/120/128).  Grid order (B, Hq, nQ, nK) with the K dimension innermost
-and "arbitrary" semantics so the f32 accumulators live in VMEM scratch across
-the K sweep.
+q/k blocks are multiples of 128 in the sequence dims, the head dim is padded
+to a lane multiple so D = 64/96/120/128 all work.  Grid order (B, Hq, nQ, nK)
+with the K dimension innermost and "arbitrary" semantics so the f32
+accumulators live in VMEM scratch across the K sweep.
+
+Differentiable: :func:`flash_attention` is a ``jax.custom_vjp``.  The forward
+kernel also emits the online-softmax statistics ``lse = m + log(l)`` per row,
+and the backward pass is three fused Pallas kernels that *recompute* the score
+tiles instead of saving them (residuals are ``(q, k, v, O, lse)`` — never the
+(B, H, S, S) matrix):
+
+  * ``_delta_kernel``   — preprocess ``delta = rowsum(dO ⊙ O)``;
+  * ``_dq_kernel``      — dQ, sweeping K blocks innermost (dQ tile stays in
+    VMEM scratch across the sweep);
+  * ``_dkv_kernel``     — dK/dV, sweeping Q blocks innermost; GQA heads write
+    per-query-head tiles that are group-summed outside the kernel (O(S·D),
+    not O(S²)).
+
+All three reuse the forward's causal / sliding-window block skipping, so the
+backward does the same ~halved causal work as the forward.
 """
 
 from __future__ import annotations
@@ -22,9 +38,37 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  bq: int, bk: int, n_kv_blocks: int, causal: bool,
-                  window: Optional[int], scale: float):
+def _block_relevant(q_start, k_start, *, bq: int, bk: int, causal: bool,
+                    window: Optional[int]):
+    """True iff any (q, k) pair in the (bq, bk) tile survives the mask —
+    entirely masked-out tiles do no work (fwd AND bwd block skipping)."""
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
+    if window is not None:
+        relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
+    return relevant
+
+
+def _tile_mask(q_start, k_start, *, bq: int, bk: int, causal: bool,
+               window: Optional[int]):
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+                bq: int, bk: int, n_kv_blocks: int, causal: bool,
+                window: Optional[int], scale: float):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -37,26 +81,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     q_start = iq * bq
     k_start = ik * bk
 
-    # block-level skip: entirely masked-out tiles do no work
-    relevant = True
-    if causal:
-        relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
-    if window is not None:
-        relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
-
-    @pl.when(relevant)
+    @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                             window=window))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)
         s = q @ k.T                                          # (bq, bk)
-        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = jnp.ones((bq, bk), bool)
-        if causal:
-            mask &= kpos <= qpos
-        if window is not None:
-            mask &= kpos > qpos - window
+        mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                          window=window)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -71,14 +104,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: Optional[int] = None,
-                    bq: int = 128, bk: int = 128,
-                    interpret: bool = False) -> jax.Array:
-    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) → (B, Sq, Hq, D)."""
+def _pad_head_dim(x: jax.Array) -> jax.Array:
+    """Pad the trailing head dim up to a TPU lane multiple (64 below 64,
+    otherwise the next multiple of 128): D = 64/96/120/128 all tile."""
+    D = x.shape[-1]
+    Dp = 64 if D <= 64 else -(-D // 128) * 128
+    if Dp == D:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Dp - D)])
+
+
+def _forward(q, k, v, causal, window, bq, bk, interpret):
+    """Shared fwd implementation → (out (B,Sq,Hq,D), lse (B,Hq,Sq) f32)."""
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -86,30 +126,244 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bk = min(bk, Sk)
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
     nq, nk = Sq // bq, Sk // bk
-    # head-major layout so a block is (1, 1, seq_block, D)
-    qt = q.transpose(0, 2, 1, 3)          # (B, Hq, Sq, D)
-    kt = k.transpose(0, 2, 1, 3)          # (B, Hkv, Sk, D)
-    vt = v.transpose(0, 2, 1, 3)
+    # head-major layout so a block is (1, 1, seq_block, D); zero-padded head
+    # dim is score/output-neutral (padded q·k columns contribute 0)
+    qt = _pad_head_dim(q.transpose(0, 2, 1, 3))          # (B, Hq, Sq, Dp)
+    kt = _pad_head_dim(k.transpose(0, 2, 1, 3))          # (B, Hkv, Sk, Dp)
+    vt = _pad_head_dim(v.transpose(0, 2, 1, 3))
+    Dp = qt.shape[-1]
 
     kernel = functools.partial(
-        _flash_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
+        _fwd_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
         window=window, scale=D ** -0.5)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B, Hq, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
-        scratch_shapes=_scratch(bq, D),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sq, Dp), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        ],
+        scratch_shapes=_scratch(bq, Dp),
         compiler_params=_compiler_params(),
         interpret=interpret,
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    return out[..., :D].transpose(0, 2, 1, 3), lse
+
+
+# ---------------------------------------------------------------------------
+# backward kernels
+# ---------------------------------------------------------------------------
+
+def _delta_kernel(o_ref, do_ref, delta_ref):
+    """Preprocess: delta = rowsum(dO ⊙ O) — the softmax-normalization term
+    shared by the dQ and dK sweeps."""
+    delta_ref[0, 0] = jnp.sum(
+        o_ref[0, 0].astype(jnp.float32) * do_ref[0, 0].astype(jnp.float32),
+        axis=1)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, bq: int, bk: int, n_kv_blocks: int, causal: bool,
+               window: Optional[int], scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                             window=window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                          window=window)
+        s = jnp.where(mask, (q @ k.T) * scale, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0][:, None]) * mask       # recomputed probs
+        dp = do @ v.T                                        # (bq, bk)
+        ds = p * (dp - delta_ref[0, 0][:, None])
+        acc_ref[...] += (ds @ k) * scale
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, dk_acc, dv_acc, *, bq: int, bk: int, n_q_blocks: int,
+                causal: bool, window: Optional[int], scale: float):
+    ikb = pl.program_id(2)
+    iqb = pl.program_id(3)
+
+    @pl.when(iqb == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = iqb * bq
+    k_start = ikb * bk
+
+    @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                             window=window))
+    def _compute():
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+        do = do_ref[0, 0].astype(jnp.float32)
+        mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
+                          window=window)
+        s = jnp.where(mask, (q @ k.T) * scale, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0][:, None]) * mask       # (bq, bk)
+        dp = do @ v.T
+        ds = p * (dp - delta_ref[0, 0][:, None])
+        dv_acc[...] += p.T @ do
+        dk_acc[...] += (ds.T @ q) * scale
+
+    @pl.when(iqb == n_q_blocks - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = D ** -0.5
+
+    qt = _pad_head_dim(q.transpose(0, 2, 1, 3))          # (B, Hq, Sq, Dp)
+    kt = _pad_head_dim(k.transpose(0, 2, 1, 3))          # (B, Hkv, Sk, Dp)
+    vt = _pad_head_dim(v.transpose(0, 2, 1, 3))
+    ot = _pad_head_dim(o.transpose(0, 2, 1, 3))
+    dot = _pad_head_dim(do.transpose(0, 2, 1, 3))
+    Dp = qt.shape[-1]
+
+    delta = pl.pallas_call(
+        _delta_kernel,
+        grid=(B, Hq, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq: (b, h, iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq), lambda b, h, iq: (b, h, iq)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        compiler_params=_compiler_params(("parallel",) * 3),
+        interpret=interpret,
+    )(ot, dot)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bq=bq, bk=bk, n_kv_blocks=nk,
+                          causal=causal, window=window, scale=scale),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, Dp), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+
+    # dK/dV: per *query* head tiles (the K/V index maps mirror the forward's
+    # GQA mapping); the g-way group sum happens outside — O(S·D) extra, no S².
+    dkh, dvh = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=bq, bk=bk, n_q_blocks=nq,
+                          causal=causal, window=window, scale=scale),
+        grid=(B, Hq, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sk, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sk, Dp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, Dp), jnp.float32),
+                        pltpu.VMEM((bk, Dp), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(kt, vt, qt, dot, lse, delta)
+
+    if g > 1:
+        dkh = dkh.reshape(B, Hkv, g, Sk, Dp).sum(axis=2)
+        dvh = dvh.reshape(B, Hkv, g, Sk, Dp).sum(axis=2)
+    dq = dq[..., :D].transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = dkh[..., :D].transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dvh[..., :D].transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing + public entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, bq, bk, interpret):
+    out, _ = _forward(q, k, v, causal, window, bq, bk, interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk, interpret):
+    out, lse = _forward(q, k, v, causal, window, bq, bk, interpret)
+    # residuals are O(B·S·(3D + 1)) — the S×S score matrix is never saved
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, bq, bk, interpret, res, do):
+    q, k, v, out, lse = res
+    return _backward(q, k, v, out, lse, do, causal, window, bq, bk, interpret)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) → (B, Sq, Hq, D).
+
+    Differentiable: gradients run through the fused Pallas backward kernels
+    (recompute-style — no (B, H, S, S) intermediate), so training can route
+    through the tiled path, not just inference.
+    """
+    return _flash(q, k, v, causal, window, bq, bk, interpret)
 
 
 def _scratch(bq: int, D: int):
@@ -121,7 +375,7 @@ def _scratch(bq: int, D: int):
     ]
 
 
-def _compiler_params():
+def _compiler_params(dimension_semantics=("parallel", "parallel", "parallel",
+                                          "arbitrary")):
     from repro.kernels.ops import tpu_compiler_params
-    return tpu_compiler_params(
-        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+    return tpu_compiler_params(dimension_semantics=dimension_semantics)

@@ -23,15 +23,44 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
+def _flash_blocks(Sq: int, Sk: int):
+    """(bq, bk) for the flash kernels: the ParallelismConfig/flags override
+    when set (autotuning hook), else the largest of 128/64 that divides."""
+    obq, obk = flags.flash_block_sizes()
+    bq = obq or (128 if Sq % 128 == 0 else 64)
+    bk = obk or (128 if Sk % 128 == 0 else 64)
+    return min(bq, Sq), min(bk, Sk)
+
+
+def flash_supported(q, k, *, causal: bool = True,
+                    window: Optional[int] = None) -> bool:
+    """True iff the tiled flash path covers these shapes — callers fall back
+    to the reference/chunked paths otherwise (never a silent wrong answer).
+
+    Conditions: seq lens divide the (possibly overridden) block sizes, and
+    position-dependent masks (causal / sliding window) only apply to aligned
+    self-attention (Sq == Sk).  The head dim is unconstrained — the kernels
+    pad it to a lane multiple internally.
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    if not isinstance(window, (int, type(None))):
+        return False        # traced per-layer window (Hymba) → reference path
+    if (causal or window is not None) and Sq != Sk:
+        return False
+    bq, bk = _flash_blocks(Sq, Sk)
+    return Sq % bq == 0 and Sk % bk == 0
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None) -> jax.Array:
+    """Differentiable flash attention (fused fwd+bwd Pallas kernels), with a
+    clean fallback to the jnp oracle for shapes the tiling can't cover."""
     from repro.kernels import flash_attention as fa
-    S = q.shape[1]
-    if S % 128 and S % 64:  # shapes the tiling can't cover → oracle
+    if not flash_supported(q, k, causal=causal, window=window):
         return ref.mha_reference(q, k, v, causal=causal, window=window)
-    bq = 128 if S % 128 == 0 else 64
+    bq, bk = _flash_blocks(q.shape[1], k.shape[1])
     return fa.flash_attention(q, k, v, causal=causal, window=window,
-                              bq=bq, bk=bq, interpret=flags.pallas_interpret())
+                              bq=bq, bk=bk, interpret=flags.pallas_interpret())
 
 
 def decode_attention(q, k, v, kpos, *, t, window: Optional[int] = None) -> jax.Array:

@@ -33,10 +33,13 @@ from repro.session import InferenceSession, TrainSession
 def _train_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape):
     """(lowered, aux-info) for a train_step cell — an abstract TrainSession
     composes state shapes, shardings and the sharded step; we just lower."""
+    from repro.runtime import flags
     sess = TrainSession.from_recipe(cfg, plan=plan, mesh=mesh, abstract=True)
     lowered = sess.lower(shapes_mod.train_input_specs(cfg, shape))
     tokens = shape.global_batch * shape.seq_len
-    useful = model_flops_per_token(cfg, shape.seq_len) * tokens
+    # flash-trained attention carries the recompute-style backward multiplier
+    useful = model_flops_per_token(
+        cfg, shape.seq_len, flash_backward=flags.use_flash_attention()) * tokens
     return lowered, {"model_flops": useful}
 
 
@@ -101,7 +104,29 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
             cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)          # body-once (raw) counts
-        walk = analyze_module(hlo)            # trip-count-weighted totals
+        # Pallas kernels are opaque custom-calls: credit the flash matmuls
+        # analytically (fwd + recompute-style bwd for train cells), spread
+        # uniformly over the per-layer flash call sites.  Only valid when
+        # flash attention is the sole Pallas kernel in the module — other
+        # kernel flags would add custom-calls this can't tell apart.
+        from repro.launch import hlo_analysis as _ha
+        from repro.runtime import flags as _flags
+        cc_flops = None
+        if _flags.use_flash_attention() and cfg.family != "ssm" and not (
+                _flags.use_fused_rmsnorm() or _flags.use_flash_decode()):
+            fwd = _ha.flash_attention_flops(
+                shape.global_batch, cfg.n_heads, shape.seq_len, shape.seq_len,
+                cfg.hd, causal=True, window=cfg.swa_window, backward=False)
+            if shape.kind == "train":
+                # fwd + delta/dQ/dKV bwd kernels; remat re-emits the forward
+                remat = plan.remat_policy != "none"
+                total = fwd * (3.5 + (2.0 if remat else 1.0))
+                per_call = total / (5 if remat else 4)
+            else:
+                per_call = fwd
+            per_call /= mesh.devices.size
+            cc_flops = {"tpu_custom_call": per_call, "MosaicTPU": per_call}
+        walk = analyze_module(hlo, custom_call_flops=cc_flops)  # trip-weighted
         t1 = time.time()
         rec.update({
             "status": "ok",

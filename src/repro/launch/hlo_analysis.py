@@ -198,11 +198,45 @@ def _shape_elems(shape_str: str) -> float:
     return total
 
 
-def analyze_module(hlo: str) -> Dict[str, float]:
-    """Trip-count-weighted per-device totals for the whole module."""
+def flash_attention_flops(B: int, Hq: int, Sq: int, Sk: int, D: int, *,
+                          causal: bool = True, window: Optional[int] = None,
+                          backward: bool = False) -> float:
+    """Matmul FLOPs inside the fused flash kernels.
+
+    The Pallas kernels lower to opaque ``custom-call``s whose dots are
+    invisible to the HLO walk; this is the analytic count to credit per call
+    site (pass it via ``analyze_module``'s ``custom_call_flops``).  Forward
+    is 2 matmuls (QKᵀ, PV); the fused backward is 7 tile-matmuls — the dQ
+    and dK/dV sweeps each recompute S and dP (2·S, 2·dP, dQ, dK, dV) —
+    i.e. the recompute-style 3.5× of forward that the cost model's
+    ``FLASH_BWD_ATTN_MULT`` also encodes.  Causal/sliding-window block
+    skipping halves / clips the visited area exactly like the kernels do.
+    """
+    if causal and window is not None:
+        area = float(min(window, Sk)) * Sq
+    elif causal:
+        area = Sq * Sk / 2.0
+    elif window is not None:
+        area = float(min(window, Sk)) * Sq
+    else:
+        area = float(Sq) * Sk
+    fwd = 2 * 2.0 * B * Hq * area * D
+    return fwd * 3.5 if backward else fwd
+
+
+def analyze_module(hlo: str,
+                   custom_call_flops: Optional[Dict[str, float]] = None
+                   ) -> Dict[str, float]:
+    """Trip-count-weighted per-device totals for the whole module.
+
+    ``custom_call_flops`` maps a substring of a ``custom-call`` line (e.g.
+    ``"tpu_custom_call"`` for Pallas/Mosaic kernels) to the FLOPs each call
+    performs internally — credited trip-count-weighted, since fused kernels
+    hide their dots from the HLO walk (see :func:`flash_attention_flops`)."""
     comps, entry, shapes = _parse_module(hlo)
     totals = {"flops": 0.0, "bytes": 0.0,
-              **{k: 0.0 for k in COLLECTIVES}, "collective_count": 0.0}
+              **{k: 0.0 for k in COLLECTIVES}, "collective_count": 0.0,
+              "custom_call_count": 0.0}
     seen_stack = set()
 
     def op_bytes(op) -> float:
@@ -248,6 +282,13 @@ def analyze_module(hlo: str) -> Dict[str, float]:
                 if mem_visible:
                     totals["bytes"] += mult * op_bytes(op)
                 continue
+            if kind == "custom-call":
+                totals["custom_call_count"] += mult
+                if custom_call_flops:
+                    for pat, fl in custom_call_flops.items():
+                        if pat in op["line"]:
+                            totals["flops"] += mult * fl
+                            break
             if kind in ("call", "conditional", "custom-call", "async-start"):
                 called = op.get("called")
                 if called:

@@ -120,13 +120,15 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
          *, causal: bool, window=None) -> jax.Array:
     """Scaled dot-product attention with GQA. q:(B,Sq,Hq,D) k/v:(B,Sk,Hkv,D).
 
-    Dispatch: Pallas flash kernel (TPU fast path, when enabled) → chunked
+    Dispatch: Pallas flash kernel (differentiable — training AND prefill take
+    it when enabled and the shapes divide the block sizes) → chunked
     online-softmax (large S, no S² materialization) → einsum oracle.
     """
     from repro.runtime import flags
-    if flags.use_flash_attention() and bias is None and isinstance(window, (int, type(None))):
+    if flags.use_flash_attention() and bias is None:
         from repro.kernels import ops
-        return ops.flash_attention(q, k, v, causal=causal, window=window)
+        if ops.flash_supported(q, k, causal=causal, window=window):
+            return ops.flash_attention(q, k, v, causal=causal, window=window)
     if bias is None and q.shape[1] * k.shape[1] > CHUNKED_THRESHOLD:
         return chunked_sdpa(q, k, v, causal=causal, window=window)
     B, Sq, Hq, D = q.shape

@@ -84,6 +84,14 @@ class ModelFamily:
         caches, logits = jax.lax.scan(step, caches, (tokens.T, ts))
         return logits[-1], caches
 
+    def supports_padded_prefill(self, cfg: ModelConfig) -> bool:
+        """True iff ``prefill_cache`` honors a ``batch["lengths"]`` (B,) of
+        valid prompt lengths over right-padded tokens (logits gathered at
+        ``lengths-1``, padded cache slots invalidated).  Only causal
+        attention stacks can claim this — recurrent/state caches consume
+        pad tokens, so the scheduler must not bucket their prompts."""
+        return False
+
     def cache_slot_axes(self, cfg: ModelConfig, caches):
         """Per-leaf request ('slot') axis of the decode caches — the axis the
         continuous-batching scheduler vmaps the per-slot decode over and

@@ -257,10 +257,34 @@ def block_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Arra
     return sharding.constrain(x, "batch", "seq", None), cache
 
 
+def _invalidate_padded_slots(caches, lengths: jax.Array):
+    """Set ``pos = -1`` on every cache slot holding a padded position
+    (``pos >= length``) so decode's validity mask skips it.  Cache ``pos``
+    leaves end in (..., B, size); lengths is (B,)."""
+    def fix(c):
+        if isinstance(c, dict):
+            if "pos" in c:
+                pos = c["pos"]
+                lim = lengths.reshape((1,) * (pos.ndim - 2) + (-1, 1))
+                return dict(c, pos=jnp.where(pos >= lim, -1, pos))
+            return {k: fix(v) for k, v in c.items()}
+        if isinstance(c, (list, tuple)):
+            return type(c)(fix(v) for v in c)
+        return c
+    return fix(caches)
+
+
 def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], caches):
     """``lm_forward(last_only=True)`` that also fills the decode caches with
     the prompt's K/V: prompt ingestion becomes one parallel teacher-forced
-    forward.  Returns (last-position logits ``(B, V)``, caches)."""
+    forward.  Returns (last-position logits ``(B, V)``, caches).
+
+    ``batch["lengths"]`` (B,), when present, marks right-padded prompts: the
+    returned logits come from position ``lengths-1`` and cache slots holding
+    padded positions are invalidated (causal masking already keeps the padded
+    tail from influencing positions before it).  This is what lets the
+    serving scheduler bucket prompt lengths to powers of two and stop
+    retracing per distinct length."""
     x = _embed_inputs(cfg, params, batch)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
@@ -286,7 +310,13 @@ def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], ca
         x, newc = jax.lax.scan(step, x, (params["blocks"], caches["blocks"]))
         new_caches["blocks"] = newc
 
-    x = layers.norm_apply(cfg.norm, params["final_norm"], x[:, -1:])
+    lengths = batch.get("lengths")
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = x[jnp.arange(B), lengths - 1][:, None]
+        new_caches = _invalidate_padded_slots(new_caches, lengths)
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x_last)
     table = params.get("lm_head", params["embed"])
     logits = layers.unembed(table, x)
     return logits[:, 0], new_caches
@@ -395,15 +425,21 @@ class DecoderOnlyLM(ModelFamily):
         return lm_decode_step(cfg, params, token, t, caches)
 
     def prefill_cache(self, cfg, params, batch, caches):
-        scanned_kind, _, pre = layer_plan(cfg)
         # Parallel prefill only for pure-attention stacks.  MoE routes per
         # token under capacity limits, so a full-sequence forward drops
         # different tokens than step-by-step decode; recurrent/hybrid kinds
         # have state caches a forward pass never materializes.  Those use the
         # decode-scan fallback (exact decode semantics, one compile).
-        if scanned_kind == "dense" and all(k == "dense" for _, k in pre):
+        if self.supports_padded_prefill(cfg):
             return lm_prefill(cfg, params, batch, caches)
         return super().prefill_cache(cfg, params, batch, caches)
+
+    def supports_padded_prefill(self, cfg):
+        # exactly the stacks routed to the parallel (causal-attention)
+        # prefill above — the decode-scan fallback ignores batch["lengths"]
+        # and would feed pad tokens into state caches
+        scanned_kind, _, pre = layer_plan(cfg)
+        return scanned_kind == "dense" and all(k == "dense" for _, k in pre)
 
     def cache_slot_axes(self, cfg, caches):
         axes: Dict[str, Any] = {}

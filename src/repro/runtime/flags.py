@@ -1,9 +1,15 @@
 """Process-wide dispatch flags.
 
-The paper's recipe is explicitly "out-of-the-box" (no custom kernels) — that is
-the default, paper-faithful configuration.  The Pallas kernels are the
-beyond-paper optimization layer and are opt-in per process (the dry-run and
-perf benchmarks flip them on for the TPU target).
+The paper's recipe is explicitly "out-of-the-box" (no custom kernels) — that
+remains the reference configuration (``kernels/ref.py`` oracles).  The Pallas
+kernels are the beyond-paper optimization layer; now that flash attention is
+differentiable (fused backward kernels, see ``kernels/flash_attention.py``)
+it is ON by default on accelerator backends: ``REPRO_FLASH_ATTENTION=auto``
+enables the tiled path whenever the backend is not CPU and the shapes divide
+the block sizes (``kernels.ops.flash_supported``), with a clean fallback to
+the reference path otherwise.  On CPU the Pallas interpreter would be a
+slowdown, not a speedup, so ``auto`` resolves to off there; ``=1`` forces the
+kernel (interpret mode on CPU — the validation path), ``=0`` forces it off.
 """
 
 from __future__ import annotations
@@ -12,15 +18,26 @@ import os
 from contextlib import contextmanager
 
 _FLAGS = {
-    "flash_attention": os.environ.get("REPRO_FLASH_ATTENTION", "0") == "1",
+    "flash_attention": os.environ.get("REPRO_FLASH_ATTENTION", "auto"),
     "flash_decode": os.environ.get("REPRO_FLASH_DECODE", "0") == "1",
     "fused_rmsnorm": os.environ.get("REPRO_FUSED_RMSNORM", "0") == "1",
     "pallas_interpret": os.environ.get("REPRO_PALLAS_INTERPRET", "auto"),
+    # flash block-size overrides (autotuning hook): None → heuristic in
+    # kernels.ops; threaded down from ParallelismConfig.flash_bq/flash_bk
+    # by the step factories in core.stepfn.
+    "flash_block_q": None,
+    "flash_block_k": None,
 }
 
 
 def use_flash_attention() -> bool:
-    return bool(_FLAGS["flash_attention"])
+    v = _FLAGS["flash_attention"]
+    if isinstance(v, bool):
+        return v
+    if v == "auto":
+        import jax
+        return jax.default_backend() != "cpu"
+    return v == "1"
 
 
 def use_flash_decode() -> bool:
@@ -29,6 +46,11 @@ def use_flash_decode() -> bool:
 
 def use_fused_rmsnorm() -> bool:
     return bool(_FLAGS["fused_rmsnorm"])
+
+
+def flash_block_sizes():
+    """(bq, bk) overrides for the flash kernels; None entries → heuristic."""
+    return _FLAGS["flash_block_q"], _FLAGS["flash_block_k"]
 
 
 def pallas_interpret() -> bool:
@@ -48,7 +70,7 @@ def set_flag(name: str, value) -> None:
 
 @contextmanager
 def flag_ctx(**kv):
-    old = {k: _FLAGS[k] for k in kv}
+    old = {k: _FLAGS[k] for k in kv}   # KeyError on unknown flag names
     _FLAGS.update(kv)
     try:
         yield

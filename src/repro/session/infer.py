@@ -173,10 +173,17 @@ class InferenceSession:
     def serve(self, prompts: Sequence, max_new_tokens, *,
               stop_token: Optional[int] = None,
               n_slots: Optional[int] = None,
-              max_len: Optional[int] = None):
+              max_len: Optional[int] = None,
+              bucket_prefills: bool = True):
         """Continuous-batching serve of a mixed-length request set.
         Returns (list of per-request 1-D token arrays in submit order,
-        ``ServingStats``)."""
+        ``ServingStats``).
+
+        ``bucket_prefills`` pads admission prefills to power-of-two prompt
+        lengths (masked — outputs are unchanged) so a mixed-length workload
+        compiles O(log max_len) prefill shapes instead of one per distinct
+        prompt length; it is automatically disabled for families whose
+        prefill cannot mask padding (recurrent/state caches)."""
         import numpy as np
         from repro.session.scheduler import (ContinuousBatchingScheduler,
                                              RequestQueue, ServingStats)
@@ -199,7 +206,8 @@ class InferenceSession:
         rids = [queue.submit(p, m, stop_token=stop_token)
                 for p, m in zip(prompts, mnt)]
         sched = ContinuousBatchingScheduler(self, n_slots=n_slots,
-                                            max_len=max_len)
+                                            max_len=max_len,
+                                            bucket_prefills=bucket_prefills)
         outputs, stats = sched.run(queue)
         self.last_stats = stats
         return [outputs[r] for r in rids], stats

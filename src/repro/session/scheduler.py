@@ -13,7 +13,11 @@ fixed ring of ``n_slots`` cache slots, where
   * a queued request is admitted mid-flight: its prompt is ingested by the
     cache-populating prefill at slot width 1 and the resulting caches are
     written into the freed slot (``stepfn.cache_insert_slot``) — no other
-    slot ever stalls or recompiles.
+    slot ever stalls or recompiles;
+  * admission prefills are bucketed to power-of-two prompt lengths (pad to
+    the bucket, gather logits at ``lengths-1``, invalidate padded cache
+    slots) on causal-attention families, so mixed-length workloads compile
+    at most log2(max_len) prefill shapes instead of one per distinct length.
 
 Slot lifecycle works across every registered family's cache layout through
 the ``ModelFamily.cache_slot_axes`` hook (ring-buffer KV, SSM/sLSTM states,
@@ -114,12 +118,19 @@ class ContinuousBatchingScheduler:
     length (every admitted request needs prompt + max_new_tokens ≤ max_len).
     """
 
-    def __init__(self, session, *, n_slots: int, max_len: int):
+    def __init__(self, session, *, n_slots: int, max_len: int,
+                 bucket_prefills: bool = True):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.session = session
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
+        # admission prefills retrace per distinct prompt shape; padding to
+        # power-of-two buckets bounds the trace count at log2(max_len) on
+        # families whose prefill honors batch["lengths"] (causal attention
+        # stacks — see ModelFamily.supports_padded_prefill)
+        self.bucket_prefills = bool(bucket_prefills) and \
+            session.family.supports_padded_prefill(session.cfg)
         self._fresh_slot = None        # immutable width-1 cache template
 
     # ------------------------------------------------------------------
@@ -135,15 +146,26 @@ class ContinuousBatchingScheduler:
                 f"request {req.rid}: prompt {P} + max_new {req.max_new_tokens} "
                 f"exceeds scheduler max_len {self.max_len}")
 
+    def _bucket_len(self, P: int) -> int:
+        """Power-of-two prefill bucket for a prompt of length ``P``, capped
+        at the slot's cache length (position p and p+size would collide in
+        the ring past that)."""
+        return min(max(1 << (P - 1).bit_length(), 16), self.max_len)
+
     def _admit(self, caches, slot_idx: int, req: Request, clock) -> Tuple:
         """Prefill-then-insert: ingest the prompt at width 1 and write the
         resulting caches into ``slot_idx``.  Returns (caches, slot state)."""
         sess = self.session
         P = len(req.prompt)
         self._check_fits(req)
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        if self.bucket_prefills and self._bucket_len(P) != P:
+            padded = np.zeros((self._bucket_len(P),), np.int32)
+            padded[:P] = req.prompt
+            batch = {"tokens": jnp.asarray(padded[None]),
+                     "lengths": jnp.full((1,), P, jnp.int32)}
         logits, slot_c = sess.prefill_cache_step(
-            sess.params, {"tokens": jnp.asarray(req.prompt[None])},
-            self._fresh_slot_cache())
+            sess.params, batch, self._fresh_slot_cache())
         tok0 = int(jnp.argmax(logits[0]))
         caches = sess.insert_slot(caches, slot_c, jnp.int32(slot_idx))
         req.admit_time = clock()

@@ -147,3 +147,44 @@ def test_serve_empty_and_stats():
     _, stats = sess.serve([prompt], [3], n_slots=1)
     assert sess.last_stats is stats and stats.generated_tokens == 3
     assert sess.generate(jnp.asarray(prompt)[None], 0).shape == (1, 5)
+
+
+def test_prefill_bucketing_bounds_shapes_and_preserves_outputs():
+    """Admission prefills are padded to power-of-two buckets: distinct prompt
+    lengths hit at most log2(max_len) prefill shapes, and outputs stay
+    token-for-token identical to the unbucketed path."""
+    sess = _session("granite_3_2b")
+    lens = (5, 6, 7, 9, 11, 12)
+    prompts = _prompts(sess, lens)
+    budgets = [3] * len(prompts)
+
+    shapes = []
+    inner = sess.prefill_cache_step
+
+    def spy(params, batch, caches):
+        shapes.append(batch["tokens"].shape[1])
+        return inner(params, batch, caches)
+
+    sess._prefill_cache_step = spy
+    try:
+        outs, _ = sess.serve(prompts, budgets, n_slots=2, max_len=32)
+    finally:
+        sess._prefill_cache_step = inner
+    assert set(shapes) == {16}, shapes           # all six lengths → one bucket
+    outs_raw, _ = sess.serve(prompts, budgets, n_slots=2, max_len=32,
+                             bucket_prefills=False)
+    for a, b in zip(outs, outs_raw):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_padded_prefill_gate_per_family():
+    """Recurrent-state families must NOT bucket (pad tokens would corrupt
+    their caches); causal-attention stacks must."""
+    dense = ContinuousBatchingScheduler(_session("granite_3_2b"),
+                                        n_slots=1, max_len=16)
+    ssm = ContinuousBatchingScheduler(_session("xlstm_125m"),
+                                      n_slots=1, max_len=16)
+    assert dense.bucket_prefills and not ssm.bucket_prefills
+    assert dense._bucket_len(5) == 16 and dense._bucket_len(16) == 16
+    assert ContinuousBatchingScheduler(
+        _session("granite_3_2b"), n_slots=1, max_len=24)._bucket_len(20) == 24
