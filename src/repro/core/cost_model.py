@@ -16,7 +16,7 @@ Terms modeled per optimizer step under 1F1B with GAS micro-batches:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core.recipe import ParallelismConfig
 from repro.core.systems import System, TPU_V5E
@@ -60,16 +60,23 @@ FLASH_BWD_ATTN_MULT = 1.5
 
 
 def model_flops_per_token(cfg: ModelConfig, seq: int, *,
-                          flash_backward: bool = False) -> float:
+                          flash_backward: bool = False,
+                          avg_docs_per_seq: float = 1.0) -> float:
     """Useful fwd+bwd FLOPs per token: 6·N_active + causal attention term.
 
     ``flash_backward=True`` models the fused flash backward (the default
     training path on TPU): the split-sweep recompute brings attention
     fwd+bwd from 6 to 9 matmul units (``FLASH_BWD_ATTN_MULT`` = 1.5) — the
     same accounting ``hlo_analysis.flash_attention_flops`` credits to the
-    compiled kernels."""
+    compiled kernels.
+
+    ``avg_docs_per_seq > 1`` models packed-sequence training (segment-masked
+    attention): a token's attention span is its document, not the row, so
+    the quadratic term shrinks to the mean document length ``seq / docs`` —
+    the same work the segment-aware kernels' block skipping avoids."""
     n = active_params(cfg)
-    w = min(cfg.swa_window or seq, seq)
+    seq_eff = seq / max(avg_docs_per_seq, 1.0)
+    w = min(cfg.swa_window or seq_eff, seq_eff)
     attn = 6.0 * cfg.n_layers * cfg.n_heads * cfg.hd * w  # 12·d_attn·s, halved causal
     if cfg.family == "ssm":
         attn = 0.0
@@ -78,12 +85,48 @@ def model_flops_per_token(cfg: ModelConfig, seq: int, *,
     return 6.0 * n + attn
 
 
+def flash_block_skip_fraction(segment_ids, *, bq: int = 128, bk: int = 128,
+                              causal: bool = True,
+                              window: Optional[int] = None) -> float:
+    """Fraction of (q-block, k-block) tiles the segment-aware flash kernels
+    skip for a concrete packed batch — the exact host-side mirror of the
+    kernels' ``_block_relevant`` test (causal / window clip + segment-id
+    interval overlap), so cost projections and benchmark reports can state
+    the measured skip rate, not a uniform-document guess."""
+    import numpy as np
+    seg = np.asarray(segment_ids)
+    if seg.ndim == 1:
+        seg = seg[None]
+    B, S = seg.shape
+    bq, bk = min(bq, S), min(bk, S)
+    nq, nk = S // bq, S // bk
+    live = 0
+    for b in range(B):
+        qmin = seg[b, :nq * bq].reshape(nq, bq).min(axis=1)
+        qmax = seg[b, :nq * bq].reshape(nq, bq).max(axis=1)
+        kmin = seg[b, :nk * bk].reshape(nk, bk).min(axis=1)
+        kmax = seg[b, :nk * bk].reshape(nk, bk).max(axis=1)
+        for iq in range(nq):
+            for ik in range(nk):
+                rel = True
+                if causal:
+                    rel &= ik * bk <= iq * bq + bq - 1
+                if window is not None:
+                    rel &= ik * bk + bk - 1 > iq * bq - window
+                rel = rel and qmax[iq] >= kmin[ik] and kmax[ik] >= qmin[iq]
+                live += rel
+    total = B * nq * nk
+    return 1.0 - live / total
+
+
 def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
                   system: System = TPU_V5E, seq: int = 2048,
                   dp_overlap: float = 0.6,
-                  flash_backward: bool = False) -> StepCost:
+                  flash_backward: bool = False,
+                  avg_docs_per_seq: float = 1.0) -> StepCost:
     tokens_replica = plan.mbs * plan.gas * seq
-    fpt = model_flops_per_token(cfg, seq, flash_backward=flash_backward)
+    fpt = model_flops_per_token(cfg, seq, flash_backward=flash_backward,
+                                avg_docs_per_seq=avg_docs_per_seq)
     flops_replica = fpt * tokens_replica
     remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[plan.remat_policy]
 

@@ -67,18 +67,25 @@ def pipeline_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     mask_mb = None
     if batch.get("loss_mask") is not None:
         mask_mb = batch["loss_mask"].reshape(gas, mbs_g, S)
+    # packed batches: segment ids are INPUTS, not activations, so they never
+    # ride the stage shift register — stage s at superstep i just re-indexes
+    # micro-batch (i - s) out of seg_mb below
+    seg_mb = None
+    if batch.get("segment_ids") is not None:
+        seg_mb = batch["segment_ids"].reshape(gas, mbs_g, S)
     vis = batch.get("vision_embeds")
 
     windows = T.layer_windows(cfg)
     win_stages = None if windows is None else windows.reshape(pp, -1)
 
     # ---- per-stage computation (vmapped over the stage axis) ----
-    def stage_apply(stage_blocks, win_stage, x):
+    def stage_apply(stage_blocks, win_stage, x, seg):
         def one_layer(carry, layer_in):
             x, aux = carry
             bp = layer_in if win_stage is None else layer_in[0]
             w = cfg.swa_window if win_stage is None else layer_in[1]
-            x, a = T.block_apply(cfg, bp, x, positions, kind=scanned_kind, window=w)
+            x, a = T.block_apply(cfg, bp, x, positions, kind=scanned_kind, window=w,
+                                 segment_ids=seg)
             return (x, aux + a), None
         body = one_layer
         if plan.remat_policy != "none":
@@ -98,12 +105,13 @@ def pipeline_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
         stage_apply = jax.checkpoint(
             stage_apply, policy=jax.checkpoint_policies.nothing_saveable,
             prevent_cse=False)
+    seg_axis = None if seg_mb is None else 0
     if win_stages is None:
-        vstage = jax.vmap(stage_apply, in_axes=(0, None, 0))
+        vstage = jax.vmap(stage_apply, in_axes=(0, None, 0, seg_axis))
     else:
-        vstage = jax.vmap(stage_apply, in_axes=(0, 0, 0))
+        vstage = jax.vmap(stage_apply, in_axes=(0, 0, 0, seg_axis))
 
-    def embed_mb(tok):
+    def embed_mb(tok, seg):
         x = L.embed_lookup(params["embed"], tok, dt)
         if cfg.family == "vlm" and vis is not None:
             nv = vis.shape[1]
@@ -111,7 +119,8 @@ def pipeline_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
         if cfg.pos_embed == "learned":
             x = x + params["pos_embed"][:S].astype(dt)[None]
         for (idx, kind), bp in zip(pre, params.get("pre_blocks", [])):
-            x, _ = T.block_apply(cfg, bp, x, positions, kind=kind, window=cfg.swa_window)
+            x, _ = T.block_apply(cfg, bp, x, positions, kind=kind,
+                                 window=cfg.swa_window, segment_ids=seg)
         return x
 
     def loss_mb(x, lab, mask):
@@ -130,7 +139,13 @@ def pipeline_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
 
     def superstep(carry, i):
         state, loss_sum, denom, aux_sum = carry
-        x_out, aux = vstage(params["blocks"], win_stages, state)
+        seg_state = None
+        if seg_mb is not None:
+            # stage s holds micro-batch (i - s); clipped indices feed stages
+            # whose output the valid mask below discards anyway
+            seg_state = jnp.take(seg_mb, jnp.clip(i - stage_ids, 0, gas - 1),
+                                 axis=0)
+        x_out, aux = vstage(params["blocks"], win_stages, state, seg_state)
         x_out = sharding.constrain(x_out, "stage", "batch", "seq", None)
         # validity: stage s at superstep i holds micro-batch (i - s)
         mb_idx = i - stage_ids                                  # (pp,)
@@ -149,13 +164,17 @@ def pipeline_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
         shifted = jnp.roll(x_out, 1, axis=0)
         # inject the next micro-batch into stage 0
         nxt = jnp.clip(i + 1, 0, gas - 1)
-        x_in = embed_mb(jax.lax.dynamic_index_in_dim(tok_mb, nxt, keepdims=False))
+        x_in = embed_mb(
+            jax.lax.dynamic_index_in_dim(tok_mb, nxt, keepdims=False),
+            None if seg_mb is None else
+            jax.lax.dynamic_index_in_dim(seg_mb, nxt, keepdims=False))
         state = shifted.at[0].set(x_in.astype(dt))
         state = sharding.constrain(state, "stage", "batch", "seq", None)
         return (state, loss_sum, denom, aux_sum), None
 
     # prologue: micro-batch 0 enters stage 0 before the first superstep
-    state0 = state0.at[0].set(embed_mb(tok_mb[0]))
+    state0 = state0.at[0].set(
+        embed_mb(tok_mb[0], None if seg_mb is None else seg_mb[0]))
     carry = (state0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
              jnp.zeros((), jnp.float32))
     (state, loss_sum, denom, aux_sum), _ = jax.lax.scan(

@@ -129,19 +129,35 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
         micro = jax.tree_util.tree_map(to_micro, batch)
         acc_dt = cfg.compute_dtype
 
-        def one(g_acc, mb):
+        # token-weighted accumulation: each micro-batch's masked-mean loss
+        # and grads are re-weighted by its live-token count, so a sparse
+        # micro (packed rows, SFT masks) doesn't get the same vote as a
+        # dense one — matching what gas=1 and the pipeline path compute.
+        # Weights are normalized to mean 1, so uniform masks reproduce the
+        # unweighted accumulation bit-for-bit (and bf16 magnitudes as-is).
+        if batch.get("loss_mask") is not None:
+            w = jnp.sum(batch["loss_mask"].astype(jnp.float32)
+                        .reshape(gas, -1), axis=1)
+        else:
+            w = jnp.full((gas,), batch["labels"].reshape(gas, -1).shape[1],
+                         jnp.float32)
+        wn = w * (gas / jnp.maximum(jnp.sum(w), 1.0))
+
+        def one(g_acc, mb_wn):
+            mb, wi = mb_wn
             (loss, metrics), g = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mb)
             g_acc = jax.tree_util.tree_map(
-                lambda a, gi: a + gi.astype(a.dtype), g_acc, g)
+                lambda a, gi: a + (gi * wi).astype(a.dtype), g_acc, g)
             return g_acc, (loss, metrics)
 
         g0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, acc_dt), params)
-        g_acc, (losses, metricses) = jax.lax.scan(one, g0, micro)
+        g_acc, (losses, metricses) = jax.lax.scan(one, g0, (micro, wn))
         grads = jax.tree_util.tree_map(lambda g: g / gas, g_acc)
-        metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), metricses)
-        return jnp.mean(losses), metrics, grads
+        metrics = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x * wn.astype(x.dtype), axis=0), metricses)
+        return jnp.mean(losses * wn), metrics, grads
 
     def train_step(state, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
@@ -267,6 +283,16 @@ def cache_take_slot(cfg: ModelConfig, caches, i):
     axes = model_api.cache_slot_axes(cfg, caches)
     return jax.tree_util.tree_map(
         lambda x, a: jax.lax.dynamic_slice_in_dim(x, i, 1, axis=a), caches, axes)
+
+
+def cache_slice_slots(cfg: ModelConfig, caches, start: int, width: int):
+    """Slice ``width`` consecutive request slots out of batched decode caches
+    (the scheduler derives narrower admission-prefill templates from one
+    full-width template instead of holding one per width)."""
+    axes = model_api.cache_slot_axes(cfg, caches)
+    return jax.tree_util.tree_map(
+        lambda x, a: jax.lax.slice_in_dim(x, start, start + width, axis=a),
+        caches, axes)
 
 
 def cache_insert_slot(cfg: ModelConfig, caches, slot_caches, i):

@@ -1,3 +1,4 @@
 from repro.data.pipeline import (  # noqa: F401
-    DataConfig, TokenDataset, SyntheticLM, make_dataset, batch_iterator,
+    DataConfig, TokenDataset, SyntheticLM, MemmapLM, make_dataset,
+    batch_iterator, pack_segments,
 )

@@ -29,10 +29,41 @@ class DataConfig:
     path: Optional[str] = None          # .bin memmap of uint16/uint32 tokens
     host_id: int = 0
     num_hosts: int = 1
+    # sequence packing: EOS-delimited documents share fixed seq_len rows; the
+    # batch grows a ``segment_ids`` key (attention stays within a document —
+    # see models.attention.sdpa) and the loss mask zeroes labels that cross a
+    # document boundary.  No pad tokens → every FLOP the cost model bills is
+    # spent on real data.
+    pack_documents: bool = False
+    eos_id: int = 0                     # document delimiter token
+
+
+def pack_segments(rows: np.ndarray, eos_id: int) -> Dict[str, np.ndarray]:
+    """Packed batch from contiguous EOS-delimited rows of (S+1) tokens.
+
+    Every token belongs to the document its preceding EOS closed: segment id
+    at position i counts the EOS tokens strictly before i, so an EOS is the
+    LAST token of its document.  The loss mask keeps the EOS prediction (a
+    real modeling target) and zeroes exactly the positions whose label is
+    the first token of the NEXT document (``tokens == eos``)."""
+    rows = np.ascontiguousarray(rows)
+    tokens = rows[:, :-1].astype(np.int32)
+    labels = rows[:, 1:].astype(np.int32)
+    boundaries = np.cumsum(rows == eos_id, axis=1)
+    seg = np.concatenate(
+        [np.zeros((rows.shape[0], 1), np.int32),
+         boundaries[:, :-1].astype(np.int32)], axis=1)
+    return {
+        "tokens": tokens,
+        "labels": labels,
+        "loss_mask": (tokens != eos_id).astype(np.float32),
+        "segment_ids": seg[:, :-1],
+    }
 
 
 class TokenDataset:
-    """Base: deterministic batch(step) → {tokens, labels, loss_mask}."""
+    """Base: deterministic batch(step) → {tokens, labels, loss_mask}
+    (+ ``segment_ids`` on the packed path)."""
 
     def __init__(self, cfg: DataConfig, vocab: int):
         self.cfg = cfg
@@ -55,13 +86,15 @@ class SyntheticLM(TokenDataset):
         row0 = c.host_id * B
         # counter-based: sequence i of step s is fully determined by (seed, s, i)
         rng = np.random.Generator(np.random.Philox(key=[c.seed + (step << 20), row0]))
-        # piecewise-linear token walks with noise → learnable local structure
-        starts = rng.integers(0, self.vocab, (B, 1))
-        steps = rng.integers(-3, 4, (B, S))
-        walk = (starts + np.cumsum(steps, axis=1)) % self.vocab
-        noise = rng.integers(0, self.vocab, (B, S))
-        take_noise = rng.random((B, S)) < 0.05
-        toks = np.where(take_noise, noise, walk).astype(np.int32)
+        if c.pack_documents:
+            # the same learnable walk, cut into EOS-delimited documents that
+            # pack the row edge-to-edge (geometric doc lengths, ~4 docs/row)
+            rows = self._walk(rng, B, S + 1)
+            rows = np.where(rows == c.eos_id, (c.eos_id + 1) % self.vocab, rows)
+            cut = rng.random((B, S + 1)) < 4.0 / (S + 1)
+            rows = np.where(cut, c.eos_id, rows)
+            return pack_segments(rows, c.eos_id)
+        toks = self._walk(rng, B, S)
         tokens = toks[:, :-1] if S > 1 else toks
         labels = toks[:, 1:] if S > 1 else toks
         pad = np.zeros((B, 1), np.int32)
@@ -72,24 +105,47 @@ class SyntheticLM(TokenDataset):
                 [np.ones((B, S - 1), np.float32), np.zeros((B, 1), np.float32)], 1),
         }
 
+    def _walk(self, rng, B: int, S: int) -> np.ndarray:
+        # piecewise-linear token walks with noise → learnable local structure
+        starts = rng.integers(0, self.vocab, (B, 1))
+        steps = rng.integers(-3, 4, (B, S))
+        walk = (starts + np.cumsum(steps, axis=1)) % self.vocab
+        noise = rng.integers(0, self.vocab, (B, S))
+        take_noise = rng.random((B, S)) < 0.05
+        return np.where(take_noise, noise, walk).astype(np.int32)
+
 
 class MemmapLM(TokenDataset):
-    """Streams contiguous windows from a flat token file."""
+    """Streams contiguous windows from a flat token file.
+
+    Window schedule: window index is pure modulo-``n_windows`` arithmetic
+    over the global step offset, so (a) every window is reachable as a base,
+    (b) the ``global_batch`` indices of one step are distinct residues —
+    host shards stay disjoint even across a wrap — and (c) a file too small
+    for one global batch fails loudly instead of silently replaying the
+    same windows every step."""
 
     def __init__(self, cfg: DataConfig, vocab: int):
         super().__init__(cfg, vocab)
         assert cfg.path is not None
         self.data = np.memmap(cfg.path, dtype=np.uint32, mode="r")
         self.n_tokens = len(self.data)
+        self.n_windows = self.n_tokens // (cfg.seq_len + 1)
+        if self.n_windows < cfg.global_batch:
+            raise ValueError(
+                f"{cfg.path}: {self.n_windows} windows of seq_len+1="
+                f"{cfg.seq_len + 1} tokens cannot fill one global batch of "
+                f"{cfg.global_batch}")
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         c = self.cfg
         B, S = self.local_batch, c.seq_len
-        n_windows = self.n_tokens // (S + 1)
-        base = (step * c.global_batch + c.host_id * B) % max(1, n_windows - B)
-        idx = (base + np.arange(B)) % n_windows
+        base = (step * c.global_batch + c.host_id * B) % self.n_windows
+        idx = (base + np.arange(B)) % self.n_windows
         rows = np.stack([self.data[i * (S + 1):(i + 1) * (S + 1)] for i in idx])
         rows = rows.astype(np.int32) % self.vocab
+        if c.pack_documents:
+            return pack_segments(rows, c.eos_id)
         return {
             "tokens": rows[:, :-1],
             "labels": rows[:, 1:],

@@ -24,6 +24,15 @@ tiles instead of saving them (residuals are ``(q, k, v, O, lse)`` — never the
 
 All three reuse the forward's causal / sliding-window block skipping, so the
 backward does the same ~halved causal work as the forward.
+
+Segment-aware (packed sequences): all four kernels accept optional per-token
+``segment_ids`` (B, S) int32.  Attention is allowed only where
+``seg[q] == seg[k]`` (composed with causal / window), which is the mask packed
+training and batched mixed-length serving prefills share with the reference /
+chunked fallbacks.  (q-block, k-block) tiles whose segment-id ranges cannot
+intersect are skipped at the block level, reusing the same ``pl.when`` skip
+machinery as the causal/window masks — a row packed with n equal documents
+does ~1/n of the causal work.
 """
 
 from __future__ import annotations
@@ -39,19 +48,27 @@ NEG_INF = -1e30
 
 
 def _block_relevant(q_start, k_start, *, bq: int, bk: int, causal: bool,
-                    window: Optional[int]):
+                    window: Optional[int], qseg=None, kseg=None):
     """True iff any (q, k) pair in the (bq, bk) tile survives the mask —
-    entirely masked-out tiles do no work (fwd AND bwd block skipping)."""
+    entirely masked-out tiles do no work (fwd AND bwd block skipping).
+
+    ``qseg``/``kseg`` are the tile's (bq,)/(bk,) segment-id vectors: when the
+    id ranges cannot intersect, no ``seg[q] == seg[k]`` pair exists — a
+    conservative interval test that is exact for the monotone ids the packer
+    emits and safe (never skips live work) for any other layout."""
     relevant = True
     if causal:
         relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
     if window is not None:
         relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
+    if qseg is not None:
+        relevant = jnp.logical_and(relevant, jnp.max(qseg) >= jnp.min(kseg))
+        relevant = jnp.logical_and(relevant, jnp.max(kseg) >= jnp.min(qseg))
     return relevant
 
 
 def _tile_mask(q_start, k_start, *, bq: int, bk: int, causal: bool,
-               window: Optional[int]):
+               window: Optional[int], qseg=None, kseg=None):
     qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     mask = jnp.ones((bq, bk), bool)
@@ -59,6 +76,8 @@ def _tile_mask(q_start, k_start, *, bq: int, bk: int, causal: bool,
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
+    if qseg is not None:
+        mask &= qseg[:, None] == kseg[None, :]
     return mask
 
 
@@ -66,9 +85,15 @@ def _tile_mask(q_start, k_start, *, bq: int, bk: int, causal: bool,
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
-                bq: int, bk: int, n_kv_blocks: int, causal: bool,
-                window: Optional[int], scale: float):
+def _fwd_kernel(q_ref, k_ref, v_ref, *rest, bq: int, bk: int,
+                n_kv_blocks: int, causal: bool, window: Optional[int],
+                scale: float, has_seg: bool):
+    if has_seg:
+        qs_ref, ks_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+        qseg, kseg = qs_ref[0], ks_ref[0]                    # (bq,), (bk,)
+    else:
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+        qseg = kseg = None
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -82,14 +107,14 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
     k_start = ik * bk
 
     @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                             window=window))
+                             window=window, qseg=qseg, kseg=kseg))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)
         s = q @ k.T                                          # (bq, bk)
         mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                          window=window)
+                          window=window, qseg=qseg, kseg=kseg)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -117,7 +142,7 @@ def _pad_head_dim(x: jax.Array) -> jax.Array:
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Dp - D)])
 
 
-def _forward(q, k, v, causal, window, bq, bk, interpret):
+def _forward(q, k, v, segment_ids, causal, window, bq, bk, interpret):
     """Shared fwd implementation → (out (B,Sq,Hq,D), lse (B,Hq,Sq) f32)."""
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
@@ -125,6 +150,9 @@ def _forward(q, k, v, causal, window, bq, bk, interpret):
     bq = min(bq, Sq)
     bk = min(bk, Sk)
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    if segment_ids is not None:
+        assert segment_ids.shape == (B, Sq) and Sq == Sk, \
+            (segment_ids.shape, q.shape, k.shape)
     nq, nk = Sq // bq, Sk // bk
     # head-major layout so a block is (1, 1, seq_block, D); zero-padded head
     # dim is score/output-neutral (padded q·k columns contribute 0)
@@ -132,19 +160,29 @@ def _forward(q, k, v, causal, window, bq, bk, interpret):
     kt = _pad_head_dim(k.transpose(0, 2, 1, 3))          # (B, Hkv, Sk, Dp)
     vt = _pad_head_dim(v.transpose(0, 2, 1, 3))
     Dp = qt.shape[-1]
+    has_seg = segment_ids is not None
 
     kernel = functools.partial(
         _fwd_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
-        window=window, scale=D ** -0.5)
+        window=window, scale=D ** -0.5, has_seg=has_seg)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+    ]
+    inputs = [qt, kt, vt]
+    if has_seg:
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+        ]
+        inputs += [segment_ids, segment_ids]
 
     out, lse = pl.pallas_call(
         kernel,
         grid=(B, Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
@@ -156,7 +194,7 @@ def _forward(q, k, v, causal, window, bq, bk, interpret):
         scratch_shapes=_scratch(bq, Dp),
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(qt, kt, vt)
+    )(*inputs)
     return out[..., :D].transpose(0, 2, 1, 3), lse
 
 
@@ -172,9 +210,15 @@ def _delta_kernel(o_ref, do_ref, delta_ref):
         axis=1)
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               acc_ref, *, bq: int, bk: int, n_kv_blocks: int, causal: bool,
-               window: Optional[int], scale: float):
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, *rest,
+               bq: int, bk: int, n_kv_blocks: int, causal: bool,
+               window: Optional[int], scale: float, has_seg: bool):
+    if has_seg:
+        qs_ref, ks_ref, dq_ref, acc_ref = rest
+        qseg, kseg = qs_ref[0], ks_ref[0]
+    else:
+        dq_ref, acc_ref = rest
+        qseg = kseg = None
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -186,14 +230,14 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
     k_start = ik * bk
 
     @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                             window=window))
+                             window=window, qseg=qseg, kseg=kseg))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)
         do = do_ref[0, 0].astype(jnp.float32)
         mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                          window=window)
+                          window=window, qseg=qseg, kseg=kseg)
         s = jnp.where(mask, (q @ k.T) * scale, NEG_INF)
         p = jnp.exp(s - lse_ref[0, 0][:, None]) * mask       # recomputed probs
         dp = do @ v.T                                        # (bq, bk)
@@ -205,9 +249,15 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
-                dv_ref, dk_acc, dv_acc, *, bq: int, bk: int, n_q_blocks: int,
-                causal: bool, window: Optional[int], scale: float):
+def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, *rest,
+                bq: int, bk: int, n_q_blocks: int, causal: bool,
+                window: Optional[int], scale: float, has_seg: bool):
+    if has_seg:
+        ks_ref, qs_ref, dk_ref, dv_ref, dk_acc, dv_acc = rest
+        qseg, kseg = qs_ref[0], ks_ref[0]
+    else:
+        dk_ref, dv_ref, dk_acc, dv_acc = rest
+        qseg = kseg = None
     ikb = pl.program_id(2)
     iqb = pl.program_id(3)
 
@@ -220,14 +270,14 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
     k_start = ikb * bk
 
     @pl.when(_block_relevant(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                             window=window))
+                             window=window, qseg=qseg, kseg=kseg))
     def _compute():
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)
         q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
         do = do_ref[0, 0].astype(jnp.float32)
         mask = _tile_mask(q_start, k_start, bq=bq, bk=bk, causal=causal,
-                          window=window)
+                          window=window, qseg=qseg, kseg=kseg)
         s = jnp.where(mask, (q @ k.T) * scale, NEG_INF)
         p = jnp.exp(s - lse_ref[0, 0][:, None]) * mask       # (bq, bk)
         dp = do @ v.T
@@ -241,7 +291,8 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
+def _backward(q, k, v, segment_ids, o, lse, do, causal, window, bq, bk,
+              interpret):
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -249,6 +300,7 @@ def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
     bk = min(bk, Sk)
     nq, nk = Sq // bq, Sk // bk
     scale = D ** -0.5
+    has_seg = segment_ids is not None
 
     qt = _pad_head_dim(q.transpose(0, 2, 1, 3))          # (B, Hq, Sq, Dp)
     kt = _pad_head_dim(k.transpose(0, 2, 1, 3))          # (B, Hkv, Sk, Dp)
@@ -272,39 +324,59 @@ def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
 
     from jax.experimental.pallas import tpu as pltpu
 
+    dq_in_specs = [
+        pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+    ]
+    dq_inputs = [qt, kt, vt, dot, lse, delta]
+    if has_seg:
+        dq_in_specs += [
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+        ]
+        dq_inputs += [segment_ids, segment_ids]
+
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, bq=bq, bk=bk, n_kv_blocks=nk,
-                          causal=causal, window=window, scale=scale),
+                          causal=causal, window=window, scale=scale,
+                          has_seg=has_seg),
         grid=(B, Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
-            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
-        ],
+        in_specs=dq_in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq, Dp), jnp.float32)],
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(qt, kt, vt, dot, lse, delta)
+    )(*dq_inputs)
 
     # dK/dV: per *query* head tiles (the K/V index maps mirror the forward's
     # GQA mapping); the g-way group sum happens outside — O(S·D) extra, no S².
+    dkv_in_specs = [
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
+        pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
+        pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+        pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+    ]
+    dkv_inputs = [kt, vt, qt, dot, lse, delta]
+    if has_seg:
+        dkv_in_specs += [
+            pl.BlockSpec((1, bk), lambda b, h, ik, iq: (b, ik)),
+            pl.BlockSpec((1, bq), lambda b, h, ik, iq: (b, iq)),
+        ]
+        dkv_inputs += [segment_ids, segment_ids]
+
     dkh, dvh = pl.pallas_call(
         functools.partial(_dkv_kernel, bq=bq, bk=bk, n_q_blocks=nq,
-                          causal=causal, window=window, scale=scale),
+                          causal=causal, window=window, scale=scale,
+                          has_seg=has_seg),
         grid=(B, Hq, nk, nq),
-        in_specs=[
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h // g, ik, 0)),
-            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, ik, iq: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
-            pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
-        ],
+        in_specs=dkv_in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h, ik, 0)),
             pl.BlockSpec((1, 1, bk, Dp), lambda b, h, ik, iq: (b, h, ik, 0)),
@@ -317,7 +389,7 @@ def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
                         pltpu.VMEM((bk, Dp), jnp.float32)],
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(kt, vt, qt, dot, lse, delta)
+    )(*dkv_inputs)
 
     if g > 1:
         dkh = dkh.reshape(B, Hkv, g, Sk, Dp).sum(axis=2)
@@ -332,21 +404,23 @@ def _backward(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
 # custom_vjp plumbing + public entry point
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash(q, k, v, causal, window, bq, bk, interpret):
-    out, _ = _forward(q, k, v, causal, window, bq, bk, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(q, k, v, segment_ids, causal, window, bq, bk, interpret):
+    out, _ = _forward(q, k, v, segment_ids, causal, window, bq, bk, interpret)
     return out
 
 
-def _flash_fwd(q, k, v, causal, window, bq, bk, interpret):
-    out, lse = _forward(q, k, v, causal, window, bq, bk, interpret)
+def _flash_fwd(q, k, v, segment_ids, causal, window, bq, bk, interpret):
+    out, lse = _forward(q, k, v, segment_ids, causal, window, bq, bk, interpret)
     # residuals are O(B·S·(3D + 1)) — the S×S score matrix is never saved
-    return out, (q, k, v, out, lse)
+    return out, (q, k, v, segment_ids, out, lse)
 
 
 def _flash_bwd(causal, window, bq, bk, interpret, res, do):
-    q, k, v, out, lse = res
-    return _backward(q, k, v, out, lse, do, causal, window, bq, bk, interpret)
+    q, k, v, segment_ids, out, lse = res
+    dq, dk, dv = _backward(q, k, v, segment_ids, out, lse, do, causal, window,
+                           bq, bk, interpret)
+    return dq, dk, dv, None          # segment ids carry no tangent
 
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
@@ -354,6 +428,7 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    segment_ids: Optional[jax.Array] = None,
                     causal: bool = True, window: Optional[int] = None,
                     bq: int = 128, bk: int = 128,
                     interpret: bool = False) -> jax.Array:
@@ -362,8 +437,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Differentiable: gradients run through the fused Pallas backward kernels
     (recompute-style — no (B, H, S, S) intermediate), so training can route
     through the tiled path, not just inference.
+
+    ``segment_ids`` (B, S) int32 restricts attention to
+    ``seg[q] == seg[k]`` — packed-sequence training and mixed-length batched
+    prefills (serving uses id ``-1`` on padded positions).  Requires aligned
+    self-attention (Sq == Sk); the fwd AND bwd kernels skip (q-block,
+    k-block) tiles whose id ranges cannot intersect.
     """
-    return _flash(q, k, v, causal, window, bq, bk, interpret)
+    if segment_ids is not None:
+        segment_ids = segment_ids.astype(jnp.int32)
+    return _flash(q, k, v, segment_ids, causal, window, bq, bk, interpret)
 
 
 def _scratch(bq: int, D: int):

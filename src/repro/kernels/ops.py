@@ -33,34 +33,42 @@ def _flash_blocks(Sq: int, Sk: int):
 
 
 def flash_supported(q, k, *, causal: bool = True,
-                    window: Optional[int] = None) -> bool:
+                    window: Optional[int] = None,
+                    segment_ids=None) -> bool:
     """True iff the tiled flash path covers these shapes — callers fall back
     to the reference/chunked paths otherwise (never a silent wrong answer).
 
     Conditions: seq lens divide the (possibly overridden) block sizes, and
-    position-dependent masks (causal / sliding window) only apply to aligned
-    self-attention (Sq == Sk).  The head dim is unconstrained — the kernels
-    pad it to a lane multiple internally.
+    position-dependent masks (causal / sliding window / packed
+    ``segment_ids``) only apply to aligned self-attention (Sq == Sk).  The
+    head dim is unconstrained — the kernels pad it to a lane multiple
+    internally.  Packed batches (``segment_ids`` present) take the tiled
+    path too: the kernels fold the segment mask into the online softmax and
+    skip dead (q-block, k-block) tiles.
     """
     Sq, Sk = q.shape[1], k.shape[1]
     if not isinstance(window, (int, type(None))):
         return False        # traced per-layer window (Hymba) → reference path
-    if (causal or window is not None) and Sq != Sk:
+    if (causal or window is not None or segment_ids is not None) and Sq != Sk:
         return False
     bq, bk = _flash_blocks(Sq, Sk)
     return Sq % bq == 0 and Sk % bk == 0
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None) -> jax.Array:
+                    window: Optional[int] = None,
+                    segment_ids=None) -> jax.Array:
     """Differentiable flash attention (fused fwd+bwd Pallas kernels), with a
     clean fallback to the jnp oracle for shapes the tiling can't cover."""
     from repro.kernels import flash_attention as fa
-    if not flash_supported(q, k, causal=causal, window=window):
-        return ref.mha_reference(q, k, v, causal=causal, window=window)
+    if not flash_supported(q, k, causal=causal, window=window,
+                           segment_ids=segment_ids):
+        return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 segment_ids=segment_ids)
     bq, bk = _flash_blocks(q.shape[1], k.shape[1])
-    return fa.flash_attention(q, k, v, causal=causal, window=window,
-                              bq=bq, bk=bk, interpret=flags.pallas_interpret())
+    return fa.flash_attention(q, k, v, segment_ids=segment_ids, causal=causal,
+                              window=window, bq=bq, bk=bk,
+                              interpret=flags.pallas_interpret())
 
 
 def decode_attention(q, k, v, kpos, *, t, window: Optional[int] = None) -> jax.Array:

@@ -13,9 +13,12 @@ import jax.numpy as jnp
 
 
 def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                  causal: bool = True, window: Optional[int] = None) -> jax.Array:
+                  causal: bool = True, window: Optional[int] = None,
+                  segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); GQA by head grouping.
-    Assumes q positions are aligned with k positions (self-attention)."""
+    Assumes q positions are aligned with k positions (self-attention).
+    ``segment_ids`` (B, S) int32 restricts attention to equal ids — the
+    packed-sequence mask the flash kernel shares (Sq must equal Sk)."""
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -29,7 +32,11 @@ def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ok &= kpos <= qpos
     if window is not None:
         ok &= kpos > qpos - window
-    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    if segment_ids is not None:
+        okb = ok[None] & (segment_ids[:, :, None] == segment_ids[:, None, :])
+        scores = jnp.where(okb[:, None, None], scores, -1e30)
+    else:
+        scores = jnp.where(ok[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
     return out.reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -200,7 +200,8 @@ def _shape_elems(shape_str: str) -> float:
 
 def flash_attention_flops(B: int, Hq: int, Sq: int, Sk: int, D: int, *,
                           causal: bool = True, window: Optional[int] = None,
-                          backward: bool = False) -> float:
+                          backward: bool = False,
+                          block_live_fraction: Optional[float] = None) -> float:
     """Matmul FLOPs inside the fused flash kernels.
 
     The Pallas kernels lower to opaque ``custom-call``s whose dots are
@@ -211,8 +212,16 @@ def flash_attention_flops(B: int, Hq: int, Sq: int, Sk: int, D: int, *,
     i.e. the recompute-style 3.5× of forward that the cost model's
     ``FLASH_BWD_ATTN_MULT`` also encodes.  Causal/sliding-window block
     skipping halves / clips the visited area exactly like the kernels do.
+
+    Packed batches (``segment_ids``): pass ``block_live_fraction`` — the
+    fraction of tiles the kernels actually visit, measured on the concrete
+    batch by ``cost_model.flash_block_skip_fraction`` (live = 1 - skip).  It
+    REPLACES the analytic causal/window clip, since the measured tile count
+    already includes those masks.
     """
-    if causal and window is not None:
+    if block_live_fraction is not None:
+        area = float(Sq) * Sk * block_live_fraction
+    elif causal and window is not None:
         area = float(min(window, Sk)) * Sq
     elif causal:
         area = Sq * Sk / 2.0

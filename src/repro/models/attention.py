@@ -55,12 +55,14 @@ CHUNKED_THRESHOLD = 32 * 1024 * 1024  # Sq·Sk elements above which we go chunke
 
 
 def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
-                 window, bq: int = 512, bk: int = 1024) -> jax.Array:
+                 window, segment_ids: Optional[jax.Array] = None,
+                 bq: int = 512, bk: int = 1024) -> jax.Array:
     """Online-softmax attention in pure jnp (flash attention expressed as a
     rolled ``lax.map``/``lax.scan`` nest): O(Sq·bk) memory instead of O(Sq·Sk),
     which is what lets the 32k-prefill shapes compile without materializing
     the S² score tensor.  ``window`` may be a traced scalar (Hymba's per-layer
-    global/SWA mix)."""
+    global/SWA mix).  ``segment_ids`` (B, S) restricts attention to equal ids
+    (packed sequences) — the same mask the flash kernel and einsum path use."""
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -80,13 +82,23 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     qb = jnp.moveaxis(qf.reshape(B, nq, bq, Hkv, g, D), 1, 0)      # (nq,B,bq,Hkv,g,D)
     kb = jnp.moveaxis(kf.reshape(B, nk, bk, Hkv, D), 1, 0)
     vb = jnp.moveaxis(vf.reshape(B, nk, bk, Hkv, D), 1, 0)
+    if segment_ids is not None:
+        segf = segment_ids.astype(jnp.int32)
+        # pad q/k tails with distinct ids so padded rows/cols never pair up
+        qsb = jnp.moveaxis(jnp.pad(segf, ((0, 0), (0, pad_q)),
+                                   constant_values=-2).reshape(B, nq, bq), 1, 0)
+        ksb = jnp.moveaxis(jnp.pad(segf, ((0, 0), (0, pad_k)),
+                                   constant_values=-3).reshape(B, nk, bk), 1, 0)
+    else:
+        qsb = jnp.zeros((nq, B, bq), jnp.int32)
+        ksb = jnp.zeros((nk, B, bk), jnp.int32)
 
     def one_q(args):
-        iq, qblk = args                                            # qblk (B,bq,Hkv,g,D)
+        iq, qblk, qsblk = args                                     # qblk (B,bq,Hkv,g,D)
         qpos = iq * bq + jnp.arange(bq)
 
         def one_k(carry, kin):
-            ik, kblk, vblk = kin
+            ik, kblk, vblk, ksblk = kin
             m, l, acc = carry
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)        # (B,Hkv,g,bq,bk)
             kpos = ik * bk + jnp.arange(bk)
@@ -95,9 +107,12 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
                 ok = ok & (kpos[None, :] <= qpos[:, None])
             if window is not None:
                 ok = ok & (kpos[None, :] > qpos[:, None] - window)
-            s = jnp.where(ok[None, None, None], s, -1e30)
+            okb = ok[None]                                         # (1|B,bq,bk)
+            if segment_ids is not None:
+                okb = okb & (qsblk[:, :, None] == ksblk[:, None, :])
+            s = jnp.where(okb[:, None, None], s, -1e30)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None]) * ok[None, None, None]
+            p = jnp.exp(s - m_new[..., None]) * okb[:, None, None]
             alpha = jnp.exp(m - m_new)
             l = l * alpha + jnp.sum(p, axis=-1)
             acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
@@ -107,30 +122,40 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
         l0 = jnp.zeros((B, Hkv, g, bq), jnp.float32)
         a0 = jnp.zeros((B, Hkv, g, bq, D), jnp.float32)
         (m, l, acc), _ = jax.lax.scan(one_k, (m0, l0, a0),
-                                      (jnp.arange(nk), kb, vb))
+                                      (jnp.arange(nk), kb, vb, ksb))
         out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,Hkv,g,bq,D)
         return jnp.moveaxis(out, 3, 1)                             # (B,bq,Hkv,g,D)
 
-    outs = jax.lax.map(one_q, (jnp.arange(nq), qb))                # (nq,B,bq,...)
+    outs = jax.lax.map(one_q, (jnp.arange(nq), qb, qsb))           # (nq,B,bq,...)
     out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * bq, Hq, D)
     return out[:, :Sq].astype(q.dtype)
 
 
 def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
-         *, causal: bool, window=None) -> jax.Array:
+         *, causal: bool, window=None,
+         segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """Scaled dot-product attention with GQA. q:(B,Sq,Hq,D) k/v:(B,Sk,Hkv,D).
 
     Dispatch: Pallas flash kernel (differentiable — training AND prefill take
     it when enabled and the shapes divide the block sizes) → chunked
     online-softmax (large S, no S² materialization) → einsum oracle.
+
+    ``segment_ids`` (B, S) int32 restricts attention to equal ids (packed
+    sequences); all three paths share the semantics bit-for-bit.  A ``bias``
+    COMPOSES with the synthesized causal/window/segment mask — it no longer
+    silently disables it (a caller passing both used to get un-masked
+    attention).
     """
     from repro.runtime import flags
     if flags.use_flash_attention() and bias is None:
         from repro.kernels import ops
-        if ops.flash_supported(q, k, causal=causal, window=window):
-            return ops.flash_attention(q, k, v, causal=causal, window=window)
+        if ops.flash_supported(q, k, causal=causal, window=window,
+                               segment_ids=segment_ids):
+            return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                       segment_ids=segment_ids)
     if bias is None and q.shape[1] * k.shape[1] > CHUNKED_THRESHOLD:
-        return chunked_sdpa(q, k, v, causal=causal, window=window)
+        return chunked_sdpa(q, k, v, causal=causal, window=window,
+                            segment_ids=segment_ids)
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -139,14 +164,18 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
     if bias is not None:
         scores = scores + bias[:, None, None, :, :]
-    elif causal or window is not None:
+    if causal or window is not None or segment_ids is not None:
         # aligned self-attention positions (the flash path's mask semantics)
         qpos = jnp.arange(Sq)[:, None]
         kpos = jnp.arange(Sk)[None, :]
         ok = (kpos <= qpos) if causal else jnp.ones((Sq, Sk), bool)
         if window is not None:
             ok &= kpos > qpos - window
-        scores = jnp.where(ok[None, None, None], scores, -1e30)
+        if segment_ids is not None:
+            okb = ok[None] & (segment_ids[:, :, None] == segment_ids[:, None, :])
+            scores = jnp.where(okb[:, None, None], scores, -1e30)
+        else:
+            scores = jnp.where(ok[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
     return out.reshape(B, Sq, Hq, D).astype(q.dtype)
@@ -154,9 +183,16 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
 
 def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
                     *, causal: bool = True, window: Optional[int] = None,
+                    segment_ids: Optional[jax.Array] = None,
                     kv_source: Optional[jax.Array] = None,
                     kv_positions: Optional[jax.Array] = None) -> jax.Array:
-    """Full-sequence attention (training / prefill / encoder / cross)."""
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    ``segment_ids`` (B, S) marks packed-document boundaries: attention stays
+    within equal ids (self-attention only — cross-attention callers must not
+    pass it)."""
+    if segment_ids is not None and kv_source is not None:
+        raise ValueError("segment_ids only apply to self-attention")
     B, S, d = x.shape
     hd = cfg.hd
     dt = x.dtype
@@ -177,7 +213,8 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Ar
     if kv_source is None:
         # self-attention: positions are aligned aranges at every call site, so
         # the mask is synthesized inside sdpa — never a (B, Sq, Sk) bias.
-        out = sdpa(q, k, v, None, causal=causal, window=window)
+        out = sdpa(q, k, v, None, causal=causal, window=window,
+                   segment_ids=segment_ids)
     else:
         out = sdpa(q, k, v, None, causal=False, window=None)  # full cross-attn
     out = out.reshape(B, S, cfg.n_heads * hd)
@@ -185,12 +222,17 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Ar
 
 
 def attention_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
-                      cache: Dict[str, jax.Array], *, window: Optional[int] = None):
+                      cache: Dict[str, jax.Array], *, window: Optional[int] = None,
+                      segment_ids: Optional[jax.Array] = None):
     """Full-sequence causal self-attention that also writes the prompt's
     post-RoPE K/V into the ring cache — the prefill half of serving, one
     parallel forward instead of a per-token decode loop.  Only the last
     ``size`` positions are scattered (slot = pos % size is unique there), so
-    ring overwrites stay deterministic.  Returns (out, new_cache)."""
+    ring overwrites stay deterministic.  Returns (out, new_cache).
+
+    ``segment_ids`` carries the batched mixed-length admission mask (id -1
+    on right-padded positions, so real tokens never attend into another
+    request's pad tail and padded prefills stay on the flash kernel)."""
     B, S, d = x.shape
     hd, dt = cfg.hd, x.dtype
     q = x @ p["wq"].astype(dt)
@@ -204,7 +246,8 @@ def attention_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.
     if cfg.pos_embed == "rope":
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
-    out = sdpa(q, k, v, None, causal=True, window=window)
+    out = sdpa(q, k, v, None, causal=True, window=window,
+               segment_ids=segment_ids)
     size = cache["k"].shape[1]
     keep = min(S, size)
     slots = positions[:, S - keep:] % size

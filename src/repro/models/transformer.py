@@ -52,9 +52,16 @@ def block_init(key, cfg: ModelConfig, *, kind: str) -> Params:
 
 
 def block_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
-                *, kind: str, window) -> Tuple[jax.Array, jax.Array]:
+                *, kind: str, window,
+                segment_ids: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
     """Returns (x, aux_loss)."""
     zero = jnp.zeros((), jnp.float32)
+    if kind in ("hymba", "mlstm", "slstm") and segment_ids is not None:
+        # recurrent state mixes across the whole row — a segment mask on the
+        # attention half alone would silently leak documents into each other
+        raise NotImplementedError(
+            f"packed-sequence training (segment_ids) is attention-only; "
+            f"block kind {kind!r} carries recurrent state across documents")
     if kind == "hymba":
         return ssm_mod.hymba_block_apply(cfg, p, x, positions, window=window), zero
     if kind == "mlstm":
@@ -62,7 +69,8 @@ def block_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
     if kind == "slstm":
         return xlstm_mod.slstm_block_apply(cfg, p, x), zero
     h = layers.norm_apply(cfg.norm, p["norm1"], x)
-    h = attention_apply(cfg, p["attn"], h, positions, causal=True, window=window)
+    h = attention_apply(cfg, p["attn"], h, positions, causal=True, window=window,
+                        segment_ids=segment_ids)
     x = x + h
     # "seq" resolves to the tp axis under sequence parallelism (Korthikanti
     # et al.): the residual/norm sections live S-sharded and XLA converts the
@@ -188,12 +196,16 @@ def lm_forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     x = _embed_inputs(cfg, params, batch)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    # packed batches: attention stays within a document (RoPE is relative, so
+    # per-document position resets are unnecessary — scores depend on i-j)
+    segment_ids = batch.get("segment_ids")
     x = sharding.constrain(x, "batch", "seq", None)
     scanned_kind, n_scanned, pre = layer_plan(cfg)
     aux = jnp.zeros((), jnp.float32)
 
     for (idx, kind), bp in zip(pre, params.get("pre_blocks", [])):
-        x, a = block_apply(cfg, bp, x, positions, kind=kind, window=cfg.swa_window)
+        x, a = block_apply(cfg, bp, x, positions, kind=kind, window=cfg.swa_window,
+                           segment_ids=segment_ids)
         aux = aux + a
 
     if n_scanned:
@@ -207,7 +219,8 @@ def lm_forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
                 w = uniform_window
             else:
                 bp, w = layer_in
-            x, a = block_apply(cfg, bp, x, positions, kind=scanned_kind, window=w)
+            x, a = block_apply(cfg, bp, x, positions, kind=scanned_kind, window=w,
+                               segment_ids=segment_ids)
             return (x, aux + a), None
 
         body = one_layer
@@ -243,13 +256,15 @@ def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
 
 
 def block_prefill(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
-                  cache, *, kind: str, window):
+                  cache, *, kind: str, window,
+                  segment_ids: Optional[jax.Array] = None):
     """``block_apply`` + ring-cache population (serving prefill).  Only the
     dense attention kind routes here; MoE (per-token capacity routing) and
     recurrent kinds use the family's decode-scan fallback."""
     assert kind == "dense", kind
     h = layers.norm_apply(cfg.norm, p["norm1"], x)
-    h, cache = attention_prefill(cfg, p["attn"], h, positions, cache, window=window)
+    h, cache = attention_prefill(cfg, p["attn"], h, positions, cache, window=window,
+                                 segment_ids=segment_ids)
     x = x + h
     x = sharding.constrain(x, "batch", "seq", None)
     h = layers.norm_apply(cfg.norm, p["norm2"], x)
@@ -288,6 +303,9 @@ def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], ca
     x = _embed_inputs(cfg, params, batch)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    # batched mixed-length admission: id -1 on padded positions keeps padded
+    # prefills masked on every sdpa path (and the flash kernel in particular)
+    segment_ids = batch.get("segment_ids")
     x = sharding.constrain(x, "batch", "seq", None)
     scanned_kind, n_scanned, pre = layer_plan(cfg)
     new_caches = dict(caches)
@@ -296,7 +314,7 @@ def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], ca
         newpre = []
         for (idx, kind), bp, c in zip(pre, params.get("pre_blocks", []), caches["pre"]):
             x, c = block_prefill(cfg, bp, x, positions, c, kind=kind,
-                                 window=cfg.swa_window)
+                                 window=cfg.swa_window, segment_ids=segment_ids)
             newpre.append(c)
         new_caches["pre"] = newpre
 
@@ -304,7 +322,7 @@ def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], ca
         def step(x, bc):
             bp, c = bc
             x, c = block_prefill(cfg, bp, x, positions, c, kind=scanned_kind,
-                                 window=cfg.swa_window)
+                                 window=cfg.swa_window, segment_ids=segment_ids)
             return x, c
 
         x, newc = jax.lax.scan(step, x, (params["blocks"], caches["blocks"]))

@@ -39,6 +39,7 @@ class InferenceSession:
         self._prefill_cache_step = None
         self._slot_step = None
         self._insert_slot = None
+        self._take_slot = None
         self.last_stats = None  # ServingStats of the most recent serve()
 
     # ------------------------------------------------------------------
@@ -127,6 +128,16 @@ class InferenceSession:
                 lambda caches, slot, i: stepfn.cache_insert_slot(
                     cfg, caches, slot, i))
         return self._insert_slot
+
+    @property
+    def take_slot(self):
+        """Jitted slot slice: (caches, i) → width-1 caches of request slot
+        ``i`` (the scheduler splits batched admission prefills with this)."""
+        if self._take_slot is None:
+            cfg = self.cfg
+            self._take_slot = jax.jit(
+                lambda caches, i: stepfn.cache_take_slot(cfg, caches, i))
+        return self._take_slot
 
     def generate(self, prompts, max_new_tokens, *,
                  stop_token: Optional[int] = None,

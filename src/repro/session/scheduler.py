@@ -10,14 +10,18 @@ fixed ring of ``n_slots`` cache slots, where
     slot at its own position (``stepfn.make_slot_serve_step``);
   * a finished request (stop token / ``max_new_tokens``) frees its slot
     immediately;
-  * a queued request is admitted mid-flight: its prompt is ingested by the
-    cache-populating prefill at slot width 1 and the resulting caches are
-    written into the freed slot (``stepfn.cache_insert_slot``) — no other
-    slot ever stalls or recompiles;
+  * queued requests are admitted mid-flight: ALL free slots are filled in
+    one pass, and requests sharing a prefill width go through ONE batched
+    mixed-length prefill call (right-padded rows with per-row ``lengths``
+    and ``segment_ids`` = -1 on the pad tail, so the masked prefill stays on
+    the flash kernel); each resulting cache row is sliced out
+    (``stepfn.cache_take_slot``) and written into its slot
+    (``stepfn.cache_insert_slot``) — no other slot ever stalls or recompiles;
   * admission prefills are bucketed to power-of-two prompt lengths (pad to
     the bucket, gather logits at ``lengths-1``, invalidate padded cache
     slots) on causal-attention families, so mixed-length workloads compile
-    at most log2(max_len) prefill shapes instead of one per distinct length.
+    at most log2(max_len) × n_slots prefill shapes instead of one per
+    distinct length.
 
 Slot lifecycle works across every registered family's cache layout through
 the ``ModelFamily.cache_slot_axes`` hook (ring-buffer KV, SSM/sLSTM states,
@@ -83,10 +87,16 @@ class RequestQueue:
                stop_token: Optional[int] = None) -> int:
         if int(max_new_tokens) < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            # an empty prompt has no position to read first-token logits from:
+            # the bucketed prefill would gather at lengths-1 == -1 (wrapping
+            # to a padded slot → garbage token) and the unbucketed path would
+            # crash on a (1, 0) tokens array — reject at the API edge instead
+            raise ValueError("prompt must contain at least one token")
         rid = self._next_rid
         self._next_rid += 1
-        self._q.append(Request(rid, np.asarray(prompt, np.int32).reshape(-1),
-                               int(max_new_tokens), stop_token,
+        self._q.append(Request(rid, prompt, int(max_new_tokens), stop_token,
                                submit_time=self._clock()))
         self.max_depth = max(self.max_depth, len(self._q))
         return rid
@@ -131,13 +141,19 @@ class ContinuousBatchingScheduler:
         # stacks — see ModelFamily.supports_padded_prefill)
         self.bucket_prefills = bool(bucket_prefills) and \
             session.family.supports_padded_prefill(session.cfg)
-        self._fresh_slot = None        # immutable width-1 cache template
+        self._fresh = None             # immutable width-n_slots cache template
 
     # ------------------------------------------------------------------
-    def _fresh_slot_cache(self):
-        if self._fresh_slot is None:
-            self._fresh_slot = self.session.init_cache(1, self.max_len)
-        return self._fresh_slot
+    def _fresh_cache(self, width: int):
+        """Zeroed width-``width`` prefill template.  Only the full-width
+        template is retained; narrower admissions slice it, so the scheduler
+        holds at most ONE extra cache's worth of device memory."""
+        from repro.core import stepfn
+        if self._fresh is None:
+            self._fresh = self.session.init_cache(self.n_slots, self.max_len)
+        if width == self.n_slots:
+            return self._fresh
+        return stepfn.cache_slice_slots(self.session.cfg, self._fresh, 0, width)
 
     def _check_fits(self, req: Request) -> None:
         P = len(req.prompt)
@@ -150,29 +166,57 @@ class ContinuousBatchingScheduler:
         """Power-of-two prefill bucket for a prompt of length ``P``, capped
         at the slot's cache length (position p and p+size would collide in
         the ring past that)."""
+        assert P >= 1, "empty prompts are rejected at RequestQueue.submit"
         return min(max(1 << (P - 1).bit_length(), 16), self.max_len)
 
-    def _admit(self, caches, slot_idx: int, req: Request, clock) -> Tuple:
-        """Prefill-then-insert: ingest the prompt at width 1 and write the
-        resulting caches into ``slot_idx``.  Returns (caches, slot state)."""
+    def _admit_many(self, caches, assignments: List[Tuple[int, Request]],
+                    clock) -> Tuple:
+        """Batched prefill-then-insert: requests sharing a prefill width
+        (their bucket, or exact length when bucketing is off) are ingested in
+        ONE mixed-length prefill call — shorter prompts ride right-padded
+        with per-row ``lengths`` and ``segment_ids`` (-1 on the pad tail, so
+        the masked prefill stays on the flash kernel) — and each resulting
+        width-1 cache row is written into its slot.  Returns
+        (caches, {slot_idx: _Slot})."""
         sess = self.session
-        P = len(req.prompt)
-        self._check_fits(req)
-        batch = {"tokens": jnp.asarray(req.prompt[None])}
-        if self.bucket_prefills and self._bucket_len(P) != P:
-            padded = np.zeros((self._bucket_len(P),), np.int32)
-            padded[:P] = req.prompt
-            batch = {"tokens": jnp.asarray(padded[None]),
-                     "lengths": jnp.full((1,), P, jnp.int32)}
-        logits, slot_c = sess.prefill_cache_step(
-            sess.params, batch, self._fresh_slot_cache())
-        tok0 = int(jnp.argmax(logits[0]))
-        caches = sess.insert_slot(caches, slot_c, jnp.int32(slot_idx))
-        req.admit_time = clock()
-        state = _Slot(req=req, t=P, last=tok0,
-                      out=list(map(int, req.prompt)) + [tok0],
-                      remaining=req.max_new_tokens - 1)
-        return caches, state
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot_idx, req in assignments:
+            self._check_fits(req)
+            P = len(req.prompt)
+            L = self._bucket_len(P) if self.bucket_prefills else P
+            groups.setdefault(L, []).append((slot_idx, req))
+
+        states: Dict[int, _Slot] = {}
+        for L, items in sorted(groups.items()):
+            W = len(items)
+            tokens = np.zeros((W, L), np.int32)
+            lengths = np.zeros((W,), np.int32)
+            for j, (_, req) in enumerate(items):
+                tokens[j, :len(req.prompt)] = req.prompt
+                lengths[j] = len(req.prompt)
+            batch = {"tokens": jnp.asarray(tokens)}
+            if (lengths != L).any():
+                batch["lengths"] = jnp.asarray(lengths)
+                # real tokens get segment 0, the pad tail -1: no row ever
+                # attends into its padding, on any sdpa path
+                batch["segment_ids"] = jnp.asarray(
+                    np.where(np.arange(L)[None] < lengths[:, None], 0, -1)
+                    .astype(np.int32))
+            logits, group_c = sess.prefill_cache_step(
+                sess.params, batch, self._fresh_cache(W))
+            toks0 = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            admit_time = clock()
+            for j, (slot_idx, req) in enumerate(items):
+                slot_c = group_c if W == 1 else sess.take_slot(
+                    group_c, jnp.int32(j))
+                caches = sess.insert_slot(caches, slot_c, jnp.int32(slot_idx))
+                req.admit_time = admit_time
+                P = len(req.prompt)
+                states[slot_idx] = _Slot(
+                    req=req, t=P, last=int(toks0[j]),
+                    out=list(map(int, req.prompt)) + [int(toks0[j])],
+                    remaining=req.max_new_tokens - 1)
+        return caches, states
 
     @staticmethod
     def _finished(state: _Slot) -> bool:
@@ -209,14 +253,18 @@ class ContinuousBatchingScheduler:
             slots[i] = None
 
         while len(queue) or any(s is not None for s in slots):
-            # admission: free slots pick up queued requests mid-flight
-            for i in range(B):
-                if slots[i] is None and len(queue):
-                    req = queue.pop()
-                    caches, slots[i] = self._admit(caches, i, req, clock)
-                    waits.append(slots[i].req.admit_time - req.submit_time)
+            # admission: ALL free slots pick up queued requests in one go —
+            # same-width prompts share a single batched mixed-length prefill
+            free = [i for i in range(B) if slots[i] is None]
+            if free and len(queue):
+                assignments = [(i, queue.pop())
+                               for i in free[:min(len(free), len(queue))]]
+                caches, admitted = self._admit_many(caches, assignments, clock)
+                for i, st in admitted.items():
+                    slots[i] = st
+                    waits.append(st.req.admit_time - st.req.submit_time)
                     n_requests += 1
-                    if self._finished(slots[i]):   # stop token in prefill,
+                    if self._finished(st):         # stop token in prefill,
                         retire(i)                  # or max_new_tokens == 1
 
             active = [i for i in range(B) if slots[i] is not None]

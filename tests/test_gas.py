@@ -41,6 +41,26 @@ def test_gas_microbatching_matches_single_batch():
     assert max(jax.tree_util.tree_leaves(diffs)) < 2e-3
 
 
+def test_gas_token_weighted_with_nonuniform_masks():
+    """Micro-batches with very different live-token counts (packed rows, SFT
+    masks): the gas>1 loss must equal the token-weighted gas=1 loss, not an
+    equal-weight mean of masked means."""
+    cfg = get_config("granite_3_2b").reduced()
+    tc = stepfn.TrainConfig(peak_lr=1e-3, warmup=1, total_steps=4)
+    B, S = 8, 32
+    batch = _batch(cfg, B, S)
+    mask = np.ones((B, S), np.float32)
+    mask[:B // 2, 2:] = 0.0       # first micro-batch: 2 live tokens per row
+    batch = dict(batch, loss_mask=jnp.asarray(mask))
+    st1, m1 = _one_step(cfg, ParallelismConfig(gas=1, mbs=8), batch, tc)
+    st2, m2 = _one_step(cfg, ParallelismConfig(gas=2, mbs=4), batch, tc)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-2)
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        st1["params"], st2["params"])
+    assert max(jax.tree_util.tree_leaves(diffs)) < 2e-3
+
+
 def test_gas_requires_divisible_batch():
     cfg = get_config("granite_3_2b").reduced()
     plan = ParallelismConfig(gas=3)

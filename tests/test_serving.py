@@ -124,6 +124,69 @@ def test_slot_take_insert_roundtrip():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_batched_admission_single_prefill_call():
+    """All initially-free slots are admitted through ONE batched mixed-length
+    prefill (prompts share a bucket), and every output stays token-identical
+    to per-request ``generate()``."""
+    sess = _session("granite_3_2b")
+    lens = (5, 9, 7, 12)                 # mixed lengths, one 16-bucket
+    prompts = _prompts(sess, lens)
+    budgets = [6, 3, 5, 4]
+    calls = []
+    inner = sess.prefill_cache_step
+
+    def spy(params, batch, caches):
+        calls.append(batch["tokens"].shape)
+        return inner(params, batch, caches)
+
+    sess._prefill_cache_step = spy
+    try:
+        outs, stats = sess.serve(prompts, budgets, n_slots=4, max_len=32)
+    finally:
+        sess._prefill_cache_step = inner
+    assert calls[0] == (4, 16), calls    # one width-4 admission prefill
+    assert stats.requests == 4
+    for p, m, o in zip(prompts, budgets, outs):
+        ref = np.asarray(sess.generate(jnp.asarray(p)[None], m)[0])
+        np.testing.assert_array_equal(o, ref)
+
+
+def test_batched_admission_recurrent_family_groups_exact_lengths():
+    """Without padded-prefill support (recurrent caches), equal-length
+    prompts still share one batched prefill; unequal ones split."""
+    sess = _session("xlstm_125m")
+    prompts = _prompts(sess, (6, 6, 9))
+    calls = []
+    inner = sess.prefill_cache_step
+
+    def spy(params, batch, caches):
+        calls.append(batch["tokens"].shape)
+        return inner(params, batch, caches)
+
+    sess._prefill_cache_step = spy
+    try:
+        outs, _ = sess.serve(prompts, [4, 4, 4], n_slots=3, max_len=16)
+    finally:
+        sess._prefill_cache_step = inner
+    assert sorted(calls) == [(1, 9), (2, 6)], calls
+    for p, o in zip(prompts, outs):
+        ref = np.asarray(sess.generate(jnp.asarray(p)[None], 4)[0])
+        np.testing.assert_array_equal(o, ref)
+
+
+def test_empty_prompt_rejected_at_submit():
+    """Regression: ``submit(prompt=[])`` used to be accepted; with bucketing
+    the prefill then gathered logits at lengths-1 == -1 (wrapping to a padded
+    position → garbage first token), without it the (1, 0) tokens array
+    crashed downstream.  Rejected at the API edge now."""
+    queue = RequestQueue()
+    with pytest.raises(ValueError, match="at least one token"):
+        queue.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="at least one token"):
+        queue.submit([], 4)
+    assert len(queue) == 0
+
+
 def test_scheduler_rejects_oversized_request_in_preflight():
     """An impossible request fails BEFORE any decode work — completed
     outputs can't be lost to a mid-drain abort, and the queue is intact."""
