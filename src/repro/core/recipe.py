@@ -109,7 +109,12 @@ class RecipeAdvisor:
     def __init__(self, system: System = TPU_V5E):
         self.system = system
 
-    def check(self, plan: ParallelismConfig) -> Dict[str, str]:
+    # unpacked rows whose mean document is shorter than seq_len/PACK_RATIO
+    # waste most of their FLOPs on padding/cross-document tokens
+    PACK_RATIO = 4.0
+
+    def check(self, plan: ParallelismConfig, *, data_cfg=None,
+              mean_doc_len: Optional[float] = None) -> Dict[str, str]:
         warnings = {}
         if plan.tp > self.system.fast_domain:
             warnings["tp"] = (
@@ -122,6 +127,14 @@ class RecipeAdvisor:
         if plan.zero_stage >= 3 and plan.pods > 1:
             warnings["zero"] = ("ZeRO-3 param all-gathers would cross the pod "
                                 "boundary every layer; keep ZeRO-3 intra-pod")
+        if (data_cfg is not None and not data_cfg.pack_documents
+                and mean_doc_len is not None
+                and mean_doc_len * self.PACK_RATIO <= data_cfg.seq_len):
+            warnings["pack"] = (
+                f"mean document length ~{mean_doc_len:.0f} is far below "
+                f"seq_len={data_cfg.seq_len}: set DataConfig.pack_documents "
+                "to pack EOS-delimited documents edge-to-edge (segment-aware "
+                "attention keeps losses exact; no FLOPs spent on padding)")
         return warnings
 
     def suggest(self, n_layers: int, devices: int, *, min_gas: int = 8) -> ParallelismConfig:

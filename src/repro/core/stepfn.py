@@ -278,6 +278,69 @@ def make_slot_serve_step(cfg: ModelConfig, plan: ParallelismConfig,
     return slot_serve_step
 
 
+def make_paged_serve_step(cfg: ModelConfig, plan: ParallelismConfig,
+                          mesh: Optional[Mesh] = None):
+    """Continuous-batching decode against the block-paged KV pool: every
+    batch row carries its own position ``ts[i]`` AND its own page-table row,
+    so requests share one pool with no per-slot cache copies.  (params,
+    tokens (B,), ts (B,), pool, page_tables (B, n_max)) → (next (B,), pool)."""
+    mapping = axis_mapping(plan)
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def paged_serve_step(params, tokens, ts, pool, page_tables):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, moe_groups(n_groups):
+            logits, pool = model_api.paged_decode_step(
+                cfg, params, tokens, ts, pool, page_tables)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, pool
+
+    return paged_serve_step
+
+
+def make_paged_prefill(cfg: ModelConfig, plan: ParallelismConfig,
+                       mesh: Optional[Mesh] = None):
+    """Admission prefill into the paged pool: right-padded prompt suffixes
+    (prefix-cache hits skip their shared history) with per-row ``hist_lens``
+    and ``lengths``.  (params, batch, pool, page_tables) → (logits (B, V),
+    pool)."""
+    mapping = axis_mapping(plan)
+    n_groups = plan.dp * plan.pods if mesh is not None else 1
+
+    def paged_prefill(params, batch, pool, page_tables):
+        ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
+        with ctx, _flash_ctx(plan), moe_groups(n_groups):
+            return model_api.paged_prefill(cfg, params, batch, pool,
+                                           page_tables)
+
+    return paged_prefill
+
+
+def pool_copy_page(cfg: ModelConfig, pool, src, dst):
+    """Device-side page copy (the copy half of copy-on-write): duplicate
+    physical page ``src`` into ``dst`` on every pool leaf.  Pool leaves put
+    the page axis at 1 — (L, n_pages, page_size, ...) — per the
+    ``init_paged_pool`` contract."""
+    return jax.tree_util.tree_map(lambda x: x.at[:, dst].set(x[:, src]), pool)
+
+
+def cache_zero_slot(cfg: ModelConfig, caches, i):
+    """Reset request slot ``i`` of batched decode caches to its init state:
+    ``pos`` leaves to -1 (no valid entries), everything else to zeros.  The
+    scheduler runs this on retire so a freed slot can never leak stale K/V
+    or recurrent state into the next admission."""
+    axes = model_api.cache_slot_axes(cfg, caches)
+
+    def one(path, x, a):
+        is_pos = any(getattr(kp, "key", None) == "pos" for kp in path)
+        shape = list(x.shape)
+        shape[a] = 1
+        fill = jnp.full(shape, -1 if is_pos else 0, x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(x, fill, i, axis=a)
+
+    return jax.tree_util.tree_map_with_path(one, caches, axes)
+
+
 def cache_take_slot(cfg: ModelConfig, caches, i):
     """Slice request slot ``i`` out of batched decode caches (slot-width 1)."""
     axes = model_api.cache_slot_axes(cfg, caches)

@@ -61,6 +61,17 @@ def pack_segments(rows: np.ndarray, eos_id: int) -> Dict[str, np.ndarray]:
     }
 
 
+def estimate_mean_doc_len(tokens: np.ndarray, eos_id: int) -> float:
+    """Mean EOS-delimited document length over a token sample (B, S): total
+    tokens over document count, where each row contributes its EOS count
+    plus one trailing partial document.  Feeds the advisor's packing hint —
+    when this is far below ``seq_len``, unpacked rows are mostly padding or
+    cross-document waste."""
+    tokens = np.asarray(tokens)
+    n_docs = int((tokens == eos_id).sum()) + tokens.shape[0]
+    return float(tokens.size) / n_docs
+
+
 class TokenDataset:
     """Base: deterministic batch(step) → {tokens, labels, loss_mask}
     (+ ``segment_ids`` on the packed path)."""

@@ -58,6 +58,100 @@ def _decode_kernel(t_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30))[0].astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(pt_ref, ts_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, ps: int, n_blocks: int,
+                         window: Optional[int], scale: float):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    t = ts_ref[b]
+    page = pt_ref[b * n_blocks + ik]
+    q = q_ref[...].reshape(1, -1).astype(jnp.float32) * scale  # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                     # (ps, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    # token j of logical page ik sits at absolute position ik*ps + j; an
+    # unmapped page (-1, DMA'd from the trash page) is masked out entirely
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0] + ik * ps
+    s = (q @ k.T)[0]                                           # (ps,)
+    valid = (page >= 0) & (kpos <= t)
+    if window is not None:
+        valid &= kpos > t - window
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur) * valid
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p[None, :] @ v)
+    m_ref[0] = m_cur
+
+    @pl.when(ik == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30))[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, *, ts: jax.Array,
+                           window: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Decode attention gathering K/V through a page table.
+
+    q: (B, 1, Hq, D); k_pool/v_pool: (n_pages, page_size, Hkv, D);
+    page_table: (B, n_max) physical page per logical page (-1 = unmapped);
+    ts: (B,) per-request query positions → (B, 1, Hq, D).
+
+    The page table arrives via scalar prefetch and steers the K/V BlockSpec
+    index maps directly: block (b, h, ik) DMAs physical page
+    ``page_table[b, ik]`` (clamped to the trash page 0 when unmapped — those
+    scores are masked).  The K sweep runs in LOGICAL page order with the same
+    online-softmax accumulation as ``decode_attention``, so with
+    ``bk == page_size`` the two are bit-identical on equivalent caches."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    n_max = page_table.shape[1]
+    g = Hq // Hkv
+    qh = q.reshape(B, Hq, D)
+    pt_flat = page_table.astype(jnp.int32).reshape(-1)
+    ts_arr = jnp.asarray(ts, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_paged_decode_kernel, ps=ps, n_blocks=n_max,
+                               window=window, scale=D ** -0.5)
+
+    def kv_map(b, h, ik, pt, ts):
+        return (jnp.maximum(pt[b * n_max + ik], 0), 0, h // g, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hq, n_max),
+            in_specs=[
+                pl.BlockSpec((1, 1, D), lambda b, h, ik, pt, ts: (b, h, 0)),
+                pl.BlockSpec((1, ps, 1, D), kv_map),
+                pl.BlockSpec((1, ps, 1, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ik, pt, ts: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, D), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        compiler_params=ops.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt_flat, ts_arr, qh, k_pool, v_pool)
+    return out.reshape(B, 1, Hq, D)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, kpos: jax.Array,
                      *, t: jax.Array, window: Optional[int] = None,

@@ -81,6 +81,23 @@ def decode_attention(q, k, v, kpos, *, t, window: Optional[int] = None) -> jax.A
                                interpret=flags.pallas_interpret())
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_table, *, ts,
+                           window: Optional[int] = None) -> jax.Array:
+    """Decode attention through a block-paged KV pool (per-request page
+    tables, see ``repro.session.kvpool``).  The Pallas kernel steers its K/V
+    DMAs straight off the scalar-prefetched page table; pools whose page size
+    doesn't fill a TPU lane tile fall back to the gather-einsum oracle."""
+    from repro.kernels import decode_attention as da
+    ps = k_pool.shape[1]
+    if ps % 128 and not flags.pallas_interpret():
+        return ref.paged_decode_attention_reference(q, k_pool, v_pool,
+                                                    page_table, ts=ts,
+                                                    window=window)
+    return da.paged_decode_attention(q, k_pool, v_pool, page_table, ts=ts,
+                                     window=window,
+                                     interpret=flags.pallas_interpret())
+
+
 def rmsnorm(x, scale, *, eps: float = 1e-6) -> jax.Array:
     if not flags.use_fused_rmsnorm():
         return ref.rmsnorm_reference(x, scale, eps=eps)

@@ -50,11 +50,16 @@ def run_stream(sess, args):
         prompts.append(rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32))
         gens.append(int(rng.randint(1, args.gen + 1)))
     t0 = time.time()
-    outs, stats = sess.serve(prompts, gens, n_slots=args.slots)
+    outs, stats = sess.serve(prompts, gens, n_slots=args.slots,
+                             paged=args.paged, page_size=args.page_size)
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: {stats.requests} requests "
           f"({sum(gens)} tokens) through {args.slots} slots in {dt:.2f}s")
     print(f"[serve] {stats}")
+    if args.paged:
+        print(f"[serve] pool: {stats.pool_pages} pages of {stats.page_size} "
+              f"(occupancy {stats.pool_occupancy:.2f}), prefix hits "
+              f"{stats.prefix_hits} (rate {stats.prefix_hit_rate:.2f})")
     for p, o in zip(prompts[:4], outs[:4]):
         print(f"[serve] P={len(p)} → {o[len(p):len(p) + 8]}")
     return outs
@@ -71,6 +76,11 @@ def main(argv=None):
                     help="serve N mixed-length requests via continuous batching")
     ap.add_argument("--slots", type=int, default=4,
                     help="scheduler slot count (stream mode)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool with "
+                         "copy-on-write prefix sharing (stream mode)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
     args = ap.parse_args(argv)
 
     sess = InferenceSession.from_recipe(args.arch, reduced=args.reduced, seed=0)

@@ -63,6 +63,24 @@ def cache_slot_axes(cfg: ModelConfig, caches):
     return family_of(cfg).cache_slot_axes(cfg, caches)
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    return family_of(cfg).supports_paged_cache(cfg)
+
+
+def init_paged_pool(cfg: ModelConfig, params, n_pages: int, page_size: int):
+    return family_of(cfg).init_paged_pool(cfg, params, n_pages, page_size)
+
+
+def paged_decode_step(cfg: ModelConfig, params, token, ts, pool, page_tables):
+    return family_of(cfg).paged_decode_step(cfg, params, token, ts, pool,
+                                            page_tables)
+
+
+def paged_prefill(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+                  pool, page_tables):
+    return family_of(cfg).paged_prefill(cfg, params, batch, pool, page_tables)
+
+
 class Model:
     """Convenience OO wrapper used by examples and the serving loop."""
 

@@ -278,6 +278,109 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, *, window: Optional[i
     }
 
 
+def _pool_positions(page_table: jax.Array, page_size: int):
+    """(kpos, pages) of a gathered pool: logical absolute position of every
+    gathered token (-1 where the logical page is unmapped) and the clamped
+    physical page indices to gather."""
+    n_max = page_table.shape[1]
+    logical = jnp.arange(n_max * page_size, dtype=jnp.int32)[None]
+    mapped = jnp.repeat(page_table >= 0, page_size, axis=1)
+    return jnp.where(mapped, logical, -1), jnp.maximum(page_table, 0)
+
+
+def attention_decode_paged(cfg: ModelConfig, p: Params, x: jax.Array,
+                           ts: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, *,
+                           window: Optional[int] = None):
+    """One-token attention against a block-paged KV pool.
+
+    x: (B, 1, d); ts: (B,) per-request absolute positions;
+    k_pool/v_pool: (n_pages, page_size, Hkv, hd) shared across requests;
+    page_table: (B, n_max) physical page per logical page, -1 = unmapped.
+    Token j of logical page i sits at position i*page_size + j.  The new K/V
+    is scattered through the table (an inactive row whose page is unmapped
+    lands on the reserved trash page 0 and is never read); the scheduler
+    guarantees the target page is mapped and exclusively owned
+    (``PagedKVManager.ensure_writable`` — the copy-on-write boundary).
+    Returns (out, k_pool, v_pool)."""
+    B, _, d = x.shape
+    hd, dt = cfg.hd, x.dtype
+    ps = k_pool.shape[1]
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+    knew = x @ p["wk"].astype(dt)
+    vnew = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(1, 1, cfg.n_heads, hd)
+        knew, vnew = knew + p["bk"].astype(dt), vnew + p["bv"].astype(dt)
+    knew = knew.reshape(B, 1, cfg.n_kv_heads, hd)
+    vnew = vnew.reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, ts[:, None], cfg.rope_theta)
+        knew = layers.apply_rope(knew, ts[:, None], cfg.rope_theta)
+    pidx = jnp.take_along_axis(page_table, (ts // ps)[:, None], axis=1)[:, 0]
+    pidx = jnp.maximum(pidx, 0)
+    slot = ts % ps
+    k_pool = k_pool.at[pidx, slot].set(knew[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pidx, slot].set(vnew[:, 0].astype(v_pool.dtype))
+    from repro.runtime import flags
+    if flags.use_flash_decode():
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(q, k_pool.astype(dt), v_pool.astype(dt),
+                                         page_table, ts=ts, window=window)
+    else:
+        from repro.kernels import ref
+        out = ref.paged_decode_attention_reference(
+            q, k_pool.astype(dt), v_pool.astype(dt), page_table, ts=ts,
+            window=window)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"].astype(dt), k_pool, v_pool
+
+
+def attention_prefill_paged(cfg: ModelConfig, p: Params, x: jax.Array,
+                            positions: jax.Array, valid: jax.Array,
+                            k_pool: jax.Array, v_pool: jax.Array,
+                            page_table: jax.Array, *,
+                            window: Optional[int] = None):
+    """Suffix prefill against a block-paged pool: rows are right-padded
+    prompt SUFFIXES (a prefix-cache hit skips re-ingesting shared pages).
+
+    x: (B, S, d); positions: (B, S) absolute (= history length + arange);
+    valid: (B, S) marks real suffix tokens (padding is routed to the trash
+    page).  Suffix K/V is scattered through the page table, then queries
+    attend the full gathered history + suffix; the causal mask over absolute
+    positions keeps stale bytes in partially-filled tail pages invisible
+    (their logical positions exceed every query position).  Returns
+    (out, k_pool, v_pool)."""
+    B, S, d = x.shape
+    hd, dt = cfg.hd, x.dtype
+    ps, n_max = k_pool.shape[1], page_table.shape[1]
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    ip = jnp.minimum(positions // ps, n_max - 1)      # pad rows may run past
+    pg = jnp.take_along_axis(page_table, ip, axis=1)  # the request's pages
+    pg = jnp.where(valid, jnp.maximum(pg, 0), 0)
+    slot = positions % ps
+    k_pool = k_pool.at[pg, slot].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[pg, slot].set(v.astype(v_pool.dtype))
+    kpos, pages = _pool_positions(page_table, ps)
+    gk = k_pool[pages].reshape(B, n_max * ps, cfg.n_kv_heads, hd)
+    gv = v_pool[pages].reshape(B, n_max * ps, cfg.n_kv_heads, hd)
+    bias = _mask_bias(positions, kpos, causal=True, window=window,
+                      k_valid=kpos >= 0)
+    out = sdpa(q, gk.astype(dt), gv.astype(dt), bias, causal=False, window=None)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return out @ p["wo"].astype(dt), k_pool, v_pool
+
+
 def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
                      cache: Dict[str, jax.Array], *, window: Optional[int] = None,
                      cross: bool = False):

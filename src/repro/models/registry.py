@@ -101,6 +101,34 @@ class ModelFamily:
         import jax
         return jax.tree_util.tree_map(lambda _: 0, caches)
 
+    def supports_paged_cache(self, cfg: ModelConfig) -> bool:
+        """True iff the family can serve from a block-paged KV pool
+        (``repro.session.kvpool``): its decode state is a positional K/V
+        list a page table can index.  Recurrent/state families return False
+        — a fixed-size recurrent state gains nothing from paging (a
+        degenerate one-page table would just pin the whole state), so the
+        scheduler keeps them on contiguous slot caches."""
+        return False
+
+    def init_paged_pool(self, cfg: ModelConfig, params, n_pages: int,
+                        page_size: int):
+        """Shared KV page pool, leaves (..., n_pages, page_size, ...)."""
+        raise NotImplementedError(
+            f"{self.name}: paged KV pool unsupported "
+            "(supports_paged_cache is False)")
+
+    def paged_decode_step(self, cfg: ModelConfig, params, token, ts, pool,
+                          page_tables):
+        """One decode step through per-request page tables → (logits, pool).
+        ``token``/``ts`` are (B,); ``page_tables`` (B, n_max)."""
+        raise NotImplementedError
+
+    def paged_prefill(self, cfg: ModelConfig, params, batch: Dict[str, Any],
+                      pool, page_tables):
+        """Suffix prefill into the pool (prefix-cache hits skip re-ingesting
+        shared pages) → (last-valid-position logits (B, V), pool)."""
+        raise NotImplementedError
+
     def extra_input_specs(self, cfg: ModelConfig, batch_size: int) -> Dict[str, Any]:
         """ShapeDtypeStructs for the family's non-token prefill inputs
         (used by the dry-run to build abstract batch specs)."""

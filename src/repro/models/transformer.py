@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.core import sharding
 from repro.models import layers, moe as moe_mod, ssm as ssm_mod, xlstm as xlstm_mod
 from repro.models.attention import (attention_init, attention_apply,
-                                    attention_decode, attention_prefill,
+                                    attention_decode, attention_decode_paged,
+                                    attention_prefill, attention_prefill_paged,
                                     cache_init)
 from repro.models.config import ModelConfig
 
@@ -341,6 +342,118 @@ def lm_prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], ca
 
 
 # ---------------------------------------------------------------------------
+# block-paged KV pool (serving; see repro.session.kvpool)
+# ---------------------------------------------------------------------------
+
+def _require_paged_plan(cfg: ModelConfig):
+    scanned_kind, n_scanned, pre = layer_plan(cfg)
+    if scanned_kind != "dense" or pre:
+        raise NotImplementedError(
+            f"paged KV pool requires a pure dense attention stack; "
+            f"{cfg.name} has kind={scanned_kind!r} pre={pre}")
+    return n_scanned
+
+
+def lm_paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int,
+                       dtype=None):
+    """One shared pool of KV pages for ALL requests: leaves are
+    (L, n_pages, page_size, Hkv, hd).  Sliding-window configs keep full
+    pools (the window mask is applied at attention time; page reclamation
+    past the window is a follow-up)."""
+    L = _require_paged_plan(cfg)
+    dt = dtype or cfg.compute_dtype
+    shape = (L, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"blocks": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
+
+
+def block_decode_paged(cfg: ModelConfig, p: Params, x, ts, pk, pv, page_table,
+                       *, window):
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    h, pk, pv = attention_decode_paged(cfg, p["attn"], h, ts, pk, pv,
+                                       page_table, window=window)
+    x = x + h
+    h = layers.norm_apply(cfg.norm, p["norm2"], x)
+    x = x + layers.mlp_apply(p["mlp"], h, gated=cfg.gated_mlp, act=cfg.act)
+    return x, pk, pv
+
+
+def block_prefill_paged(cfg: ModelConfig, p: Params, x, positions, valid,
+                        pk, pv, page_table, *, window):
+    h = layers.norm_apply(cfg.norm, p["norm1"], x)
+    h, pk, pv = attention_prefill_paged(cfg, p["attn"], h, positions, valid,
+                                        pk, pv, page_table, window=window)
+    x = x + h
+    x = sharding.constrain(x, "batch", "seq", None)
+    h = layers.norm_apply(cfg.norm, p["norm2"], x)
+    x = x + layers.mlp_apply(p["mlp"], h, gated=cfg.gated_mlp, act=cfg.act)
+    return sharding.constrain(x, "batch", "seq", None), pk, pv
+
+
+def lm_paged_decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                         ts: jax.Array, pool, page_tables):
+    """One decode step where every batch row reads/writes KV through its OWN
+    page-table row at its OWN position.  token/ts: (B,);
+    page_tables: (B, n_max) int32.  → (logits (B, V), pool)."""
+    _require_paged_plan(cfg)
+    dt = cfg.compute_dtype
+    x = layers.embed_lookup(params["embed"], token[:, None], dt)
+    if cfg.pos_embed == "learned":
+        maxp = params["pos_embed"].shape[0]
+        x = x + params["pos_embed"][jnp.minimum(ts, maxp - 1)].astype(dt)[:, None]
+
+    def step(x, layer_in):
+        bp, pk, pv = layer_in
+        x, pk, pv = block_decode_paged(cfg, bp, x, ts, pk, pv, page_tables,
+                                       window=cfg.swa_window)
+        return x, (pk, pv)
+
+    x, (nk, nv) = jax.lax.scan(
+        step, x, (params["blocks"], pool["blocks"]["k"], pool["blocks"]["v"]))
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params.get("lm_head", params["embed"])
+    logits = layers.unembed(table, x)[:, 0]
+    return logits, {"blocks": {"k": nk, "v": nv}}
+
+
+def lm_paged_prefill(cfg: ModelConfig, params: Params,
+                     batch: Dict[str, jax.Array], pool, page_tables):
+    """Suffix prefill into the paged pool.
+
+    ``batch``: ``tokens`` (B, S) right-padded prompt SUFFIXES,
+    ``hist_lens`` (B,) tokens already in the pool via shared prefix pages
+    (re-ingestion skipped), ``lengths`` (B,) valid suffix lengths (≥ 1 — the
+    scheduler caps sharing at prompt-1 so the first-token logits always have
+    a position to come from).  Returns (logits at the last valid suffix
+    position (B, V), pool)."""
+    _require_paged_plan(cfg)
+    tokens = batch["tokens"]
+    hist = batch["hist_lens"]
+    lengths = batch["lengths"]
+    B, S = tokens.shape
+    dt = cfg.compute_dtype
+    positions = hist[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    valid = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]
+    x = layers.embed_lookup(params["embed"], tokens, dt)
+    if cfg.pos_embed == "learned":
+        maxp = params["pos_embed"].shape[0]
+        x = x + params["pos_embed"][jnp.minimum(positions, maxp - 1)].astype(dt)
+
+    def step(x, layer_in):
+        bp, pk, pv = layer_in
+        x, pk, pv = block_prefill_paged(cfg, bp, x, positions, valid, pk, pv,
+                                        page_tables, window=cfg.swa_window)
+        return x, (pk, pv)
+
+    x, (nk, nv) = jax.lax.scan(
+        step, x, (params["blocks"], pool["blocks"]["k"], pool["blocks"]["v"]))
+    x_last = x[jnp.arange(B), lengths - 1][:, None]
+    x_last = layers.norm_apply(cfg.norm, params["final_norm"], x_last)
+    table = params.get("lm_head", params["embed"])
+    logits = layers.unembed(table, x_last)
+    return logits[:, 0], {"blocks": {"k": nk, "v": nv}}
+
+
+# ---------------------------------------------------------------------------
 # decode (one token against caches)
 # ---------------------------------------------------------------------------
 
@@ -469,6 +582,23 @@ class DecoderOnlyLM(ModelFamily):
             axes["hymba"] = jax.tree_util.tree_map(lambda _: 0, caches["hymba"])
         return axes
 
+    # --- block-paged KV pool (see repro.session.kvpool) ----------------
+    def supports_paged_cache(self, cfg):
+        # positional K/V lists only: exactly the pure-attention stacks.
+        # Recurrent/state families (SSM, hybrid) keep contiguous slot
+        # caches — their state is not a list of per-position entries, so a
+        # page table has nothing to index; the scheduler gates on this.
+        return self.supports_padded_prefill(cfg)
+
+    def init_paged_pool(self, cfg, params, n_pages, page_size):
+        return lm_paged_pool_init(cfg, n_pages, page_size)
+
+    def paged_decode_step(self, cfg, params, token, ts, pool, page_tables):
+        return lm_paged_decode_step(cfg, params, token, ts, pool, page_tables)
+
+    def paged_prefill(self, cfg, params, batch, pool, page_tables):
+        return lm_paged_prefill(cfg, params, batch, pool, page_tables)
+
 
 class MoELM(DecoderOnlyLM):
     """Routed-FFN variant; routing/EP live in ``repro.models.moe`` blocks."""
@@ -484,6 +614,11 @@ class HybridLM(DecoderOnlyLM):
 
 class VLM(DecoderOnlyLM):
     """LM backbone over concatenated [vision_embeds; tokens] inputs."""
+
+    def supports_paged_cache(self, cfg):
+        # the paged suffix prefill is token-only; vision embeddings occupy
+        # the leading positions and would be re-embedded as tokens
+        return False
 
     def extra_input_specs(self, cfg, batch_size):
         return {"vision_embeds": jax.ShapeDtypeStruct(

@@ -14,3 +14,5 @@ from repro.session.train import TrainSession  # noqa: F401
 from repro.session.infer import InferenceSession  # noqa: F401
 from repro.session.scheduler import (  # noqa: F401
     ContinuousBatchingScheduler, Request, RequestQueue, ServingStats)
+from repro.session.kvpool import (  # noqa: F401
+    PagedKVManager, PagePool, PrefixCache)

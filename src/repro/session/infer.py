@@ -40,6 +40,10 @@ class InferenceSession:
         self._slot_step = None
         self._insert_slot = None
         self._take_slot = None
+        self._zero_slot = None
+        self._paged_prefill_step = None
+        self._paged_slot_step = None
+        self._pool_copy_page = None
         self.last_stats = None  # ServingStats of the most recent serve()
 
     # ------------------------------------------------------------------
@@ -139,6 +143,61 @@ class InferenceSession:
                 lambda caches, i: stepfn.cache_take_slot(cfg, caches, i))
         return self._take_slot
 
+    @property
+    def zero_slot(self):
+        """Jitted slot reset: (caches, i) → caches with request slot ``i``
+        zeroed (positions → -1).  Retire uses this so freed slots never hold
+        stale K/V."""
+        if self._zero_slot is None:
+            cfg = self.cfg
+            self._zero_slot = jax.jit(
+                lambda caches, i: stepfn.cache_zero_slot(cfg, caches, i),
+                donate_argnums=(0,))
+        return self._zero_slot
+
+    # ------------------------------------------------------------------
+    # block-paged KV pool steps (repro.session.kvpool)
+    # ------------------------------------------------------------------
+    def init_paged_pool(self, n_pages: int, page_size: int):
+        """Device-side KV page pool, leaves (layers, n_pages, page_size,
+        n_kv_heads, head_dim) in compute dtype (page 0 is the trash page)."""
+        return model_api.init_paged_pool(self.cfg, self.params, n_pages,
+                                         page_size)
+
+    @property
+    def paged_prefill_step(self):
+        """Jitted suffix prefill through page tables:
+        (params, batch, pool, page_tables) → (last-valid logits (B, V), pool).
+        ``batch`` = tokens (B, S) right-padded suffixes + hist_lens (B,) +
+        lengths (B,)."""
+        if self._paged_prefill_step is None:
+            self._paged_prefill_step = jax.jit(
+                stepfn.make_paged_prefill(self.cfg, self.plan, self.mesh),
+                donate_argnums=(2,))   # the pool is rebound every call
+        return self._paged_prefill_step
+
+    @property
+    def paged_slot_step(self):
+        """Jitted per-slot-position decode through page tables:
+        (params, tokens (B,), ts (B,), pool, page_tables) → (next (B,), pool)."""
+        if self._paged_slot_step is None:
+            self._paged_slot_step = jax.jit(
+                stepfn.make_paged_serve_step(self.cfg, self.plan, self.mesh),
+                donate_argnums=(3,))
+        return self._paged_slot_step
+
+    @property
+    def pool_copy_page(self):
+        """Jitted COW page copy: (pool, src, dst) → pool with physical page
+        ``src`` copied over ``dst`` in every layer."""
+        if self._pool_copy_page is None:
+            cfg = self.cfg
+            self._pool_copy_page = jax.jit(
+                lambda pool, src, dst: stepfn.pool_copy_page(
+                    cfg, pool, src, dst),
+                donate_argnums=(0,))
+        return self._pool_copy_page
+
     def generate(self, prompts, max_new_tokens, *,
                  stop_token: Optional[int] = None,
                  n_slots: Optional[int] = None):
@@ -185,7 +244,12 @@ class InferenceSession:
               stop_token: Optional[int] = None,
               n_slots: Optional[int] = None,
               max_len: Optional[int] = None,
-              bucket_prefills: bool = True):
+              bucket_prefills: bool = True,
+              paged: bool = False,
+              page_size: int = 16,
+              n_pages: Optional[int] = None,
+              prefix_sharing: bool = True,
+              scheduler: Optional["ContinuousBatchingScheduler"] = None):
         """Continuous-batching serve of a mixed-length request set.
         Returns (list of per-request 1-D token arrays in submit order,
         ``ServingStats``).
@@ -194,7 +258,14 @@ class InferenceSession:
         lengths (masked — outputs are unchanged) so a mixed-length workload
         compiles O(log max_len) prefill shapes instead of one per distinct
         prompt length; it is automatically disabled for families whose
-        prefill cannot mask padding (recurrent/state caches)."""
+        prefill cannot mask padding (recurrent/state caches).
+
+        ``paged=True`` serves from the block-paged KV pool
+        (``repro.session.kvpool``): per-request page tables over shared
+        physical pages, prefix-cache reuse of identical prompt prefixes, and
+        copy-on-write growth — greedy outputs stay token-identical to the
+        fixed-slot path.  Pass a previously returned ``scheduler`` to keep
+        its prefix cache warm across calls."""
         import numpy as np
         from repro.session.scheduler import (ContinuousBatchingScheduler,
                                              RequestQueue, ServingStats)
@@ -216,9 +287,13 @@ class InferenceSession:
         queue = RequestQueue()
         rids = [queue.submit(p, m, stop_token=stop_token)
                 for p, m in zip(prompts, mnt)]
-        sched = ContinuousBatchingScheduler(self, n_slots=n_slots,
-                                            max_len=max_len,
-                                            bucket_prefills=bucket_prefills)
+        sched = scheduler if scheduler is not None else \
+            ContinuousBatchingScheduler(self, n_slots=n_slots,
+                                        max_len=max_len,
+                                        bucket_prefills=bucket_prefills,
+                                        paged=paged, page_size=page_size,
+                                        n_pages=n_pages,
+                                        prefix_sharing=prefix_sharing)
         outputs, stats = sched.run(queue)
         self.last_stats = stats
         return [outputs[r] for r in rids], stats

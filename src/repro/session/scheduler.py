@@ -65,11 +65,24 @@ class ServingStats:
     occupancy: float = 0.0             # mean active-slot fraction per decode step
     mean_queue_wait_s: float = 0.0     # submit → admission (prefill start)
     max_queue_depth: int = 0
+    # memory accounting (see repro.session.kvpool): stranded_fraction is the
+    # mean over decode steps of 1 - live_tokens / reserved_token_capacity —
+    # fixed slots reserve n_active*max_len, the paged pool only mapped pages
+    stranded_fraction: float = 0.0
+    prompt_tokens: int = 0             # tokens across all admitted prompts
+    prefill_tokens: int = 0            # tokens actually prefilled (≤ prompt)
+    # paged-pool mode only
+    page_size: int = 0
+    pool_pages: int = 0                # allocatable pages (excl. trash page)
+    pool_occupancy: float = 0.0        # mean allocated-page fraction per step
+    prefix_hits: int = 0               # admissions that shared ≥ 1 token
+    prefix_hit_rate: float = 0.0       # shared prompt tokens / prompt tokens
 
     def __str__(self) -> str:
         return (f"ServingStats(requests={self.requests}, "
                 f"tok/s={self.tok_per_s:.1f}, "
                 f"occupancy={self.occupancy:.2f}, "
+                f"stranded={self.stranded_fraction:.2f}, "
                 f"steps={self.decode_steps}, "
                 f"queue_wait={self.mean_queue_wait_s * 1e3:.1f}ms)")
 
@@ -104,6 +117,11 @@ class RequestQueue:
     def pop(self) -> Request:
         return self._q.popleft()
 
+    def push_front(self, req: Request) -> None:
+        """Return a popped-but-unadmitted request to the head of the queue
+        (the paged scheduler defers admissions under pool pressure)."""
+        self._q.appendleft(req)
+
     def pending(self) -> Tuple[Request, ...]:
         return tuple(self._q)
 
@@ -129,7 +147,9 @@ class ContinuousBatchingScheduler:
     """
 
     def __init__(self, session, *, n_slots: int, max_len: int,
-                 bucket_prefills: bool = True):
+                 bucket_prefills: bool = True, paged: bool = False,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.session = session
@@ -142,6 +162,20 @@ class ContinuousBatchingScheduler:
         self.bucket_prefills = bool(bucket_prefills) and \
             session.family.supports_padded_prefill(session.cfg)
         self._fresh = None             # immutable width-n_slots cache template
+        # --- block-paged KV pool mode (repro.session.kvpool) ----------
+        self.paged = bool(paged)
+        if self.paged and not session.family.supports_paged_cache(session.cfg):
+            raise ValueError(
+                f"family {session.family.name!r} does not support the paged "
+                "KV pool (supports_paged_cache is False) — recurrent/state "
+                "caches stay on contiguous slots")
+        self.page_size = int(page_size)
+        self.n_max = -(-self.max_len // self.page_size)
+        # default pool: worst case of every slot fully grown, + trash page 0
+        self.n_pages = int(n_pages) if n_pages is not None \
+            else 1 + self.n_slots * self.n_max
+        self.prefix_sharing = bool(prefix_sharing)
+        self._paged_state = None       # (PagedKVManager, device-pool holder)
 
     # ------------------------------------------------------------------
     def _fresh_cache(self, width: int):
@@ -161,6 +195,13 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request {req.rid}: prompt {P} + max_new {req.max_new_tokens} "
                 f"exceeds scheduler max_len {self.max_len}")
+        if self.paged:
+            need = -(-(P + req.max_new_tokens) // self.page_size)
+            if need > self.n_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages of "
+                    f"{self.page_size} tokens but the pool only has "
+                    f"{self.n_pages - 1} allocatable pages")
 
     def _bucket_len(self, P: int) -> int:
         """Power-of-two prefill bucket for a prompt of length ``P``, capped
@@ -228,6 +269,8 @@ class ContinuousBatchingScheduler:
             clock=time.perf_counter) -> Tuple[Dict[int, np.ndarray], ServingStats]:
         """Drain ``queue``; returns ({rid: prompt+generated token array},
         ``ServingStats``)."""
+        if self.paged:
+            return self._run_paged(queue, clock)
         sess = self.session
         B = self.n_slots
         # preflight: reject impossible requests before ANY decode work, so a
@@ -243,13 +286,19 @@ class ContinuousBatchingScheduler:
         occupied = 0
         generated = 0
         n_requests = 0
+        prompt_tokens = 0
+        stranded = 0.0
         t0 = clock()
 
         def retire(i: int):
-            nonlocal generated
+            nonlocal generated, caches
             st = slots[i]
             outputs[st.req.rid] = np.asarray(st.out, np.int32)
             generated += len(st.out) - len(st.req.prompt)
+            # reset the freed slot on device (pos → -1, state → 0): stale
+            # K/V must be invalid the moment the slot is free, not only
+            # after the next admission happens to overwrite it
+            caches = sess.zero_slot(caches, jnp.int32(i))
             slots[i] = None
 
         while len(queue) or any(s is not None for s in slots):
@@ -264,6 +313,7 @@ class ContinuousBatchingScheduler:
                     slots[i] = st
                     waits.append(st.req.admit_time - st.req.submit_time)
                     n_requests += 1
+                    prompt_tokens += len(st.req.prompt)
                     if self._finished(st):         # stop token in prefill,
                         retire(i)                  # or max_new_tokens == 1
 
@@ -282,6 +332,8 @@ class ContinuousBatchingScheduler:
             nxt = np.asarray(nxt)
             steps += 1
             occupied += len(active)
+            live = sum(slots[i].t for i in active)
+            stranded += 1.0 - live / (len(active) * self.max_len)
 
             for i in active:
                 st = slots[i]
@@ -302,5 +354,225 @@ class ContinuousBatchingScheduler:
             occupancy=occupied / (steps * B) if steps else 0.0,
             mean_queue_wait_s=float(np.mean(waits)) if waits else 0.0,
             max_queue_depth=queue.max_depth,
+            stranded_fraction=stranded / steps if steps else 0.0,
+            prompt_tokens=prompt_tokens,
+            prefill_tokens=prompt_tokens,     # fixed slots re-prefill it all
+        )
+        return outputs, stats
+
+    # ------------------------------------------------------------------
+    # block-paged KV pool mode (repro.session.kvpool)
+    # ------------------------------------------------------------------
+    def _paged(self):
+        """Lazy (manager, device-pool holder) — built once and kept across
+        ``run()`` calls so the prefix cache persists between request waves
+        (the shared-system-prompt case)."""
+        if self._paged_state is None:
+            from repro.session import kvpool
+            sess = self.session
+            holder = {"pool": sess.init_paged_pool(self.n_pages,
+                                                   self.page_size)}
+
+            def copy_page(src: int, dst: int) -> None:
+                holder["pool"] = sess.pool_copy_page(
+                    holder["pool"], jnp.int32(src), jnp.int32(dst))
+
+            pool = kvpool.PagePool(self.n_pages, self.page_size)
+            cache = kvpool.PrefixCache(pool) if self.prefix_sharing else None
+            mgr = kvpool.PagedKVManager(pool, self.n_slots, self.n_max,
+                                        prefix_cache=cache,
+                                        copy_page=copy_page)
+            self._paged_state = (mgr, holder)
+        return self._paged_state
+
+    def _reserve_pages(self, req: Request) -> int:
+        """Worst-case page count of a request fully decoded (every shared
+        page COW'd into an exclusive copy)."""
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+
+    def _admit_many_paged(self, mgr, holder, assignments, clock, reserved):
+        """Paged admission: map pages (longest cached prefix shared, COW on
+        a partial boundary page), then ONE batched suffix prefill per shared
+        padded width — rows carry per-request ``hist_lens`` so mixed history
+        depths share a trace.
+
+        Admission control is by worst-case RESERVATION, not free pages: a
+        request enters only when its fully-decoded page count fits next to
+        every active request's (``reserved``).  That guarantee makes decode
+        growth infallible — live pages never exceed the reservation sum, and
+        anything else in the pool is cache-owned and evictable.  Requests
+        that don't fit are handed back for re-queueing (FIFO preserved).
+        Returns ({slot: _Slot}, [deferred requests], prompt_toks,
+        prefill_toks, shared_toks)."""
+        sess = self.session
+        ps = mgr.pool.page_size
+        avail = self.n_pages - 1 - reserved
+        items = []                              # (slot, req, hist)
+        deferred = []
+        for slot_idx, req in assignments:
+            self._check_fits(req)
+            need = self._reserve_pages(req)
+            if deferred or need > avail:        # keep FIFO order on pressure
+                deferred.append(req)
+                continue
+            try:
+                items.append((slot_idx, req, mgr.admit(slot_idx, req.prompt,
+                                                       share=self.prefix_sharing)))
+                avail -= need
+            except MemoryError:
+                deferred.append(req)
+
+        groups: Dict[int, List[Tuple[int, Request, int]]] = {}
+        for slot_idx, req, hist in items:
+            Ls = len(req.prompt) - hist
+            L = min(self._bucket_len(Ls), mgr.n_max * ps - hist) \
+                if self.bucket_prefills else Ls
+            groups.setdefault(L, []).append((slot_idx, req, hist))
+
+        states: Dict[int, _Slot] = {}
+        prompt_toks = prefill_toks = shared_toks = 0
+        for L, rows in sorted(groups.items()):
+            W = len(rows)
+            tokens = np.zeros((W, L), np.int32)
+            hists = np.zeros((W,), np.int32)
+            lens = np.zeros((W,), np.int32)
+            slot_ids = np.zeros((W,), np.int64)
+            for j, (slot_idx, req, hist) in enumerate(rows):
+                suffix = req.prompt[hist:]
+                tokens[j, :len(suffix)] = suffix
+                hists[j] = hist
+                lens[j] = len(suffix)
+                slot_ids[j] = slot_idx
+            batch = {"tokens": jnp.asarray(tokens),
+                     "hist_lens": jnp.asarray(hists),
+                     "lengths": jnp.asarray(lens)}
+            logits, holder["pool"] = sess.paged_prefill_step(
+                sess.params, batch, holder["pool"],
+                jnp.asarray(mgr.tables[slot_ids]))
+            toks0 = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            admit_time = clock()
+            for j, (slot_idx, req, hist) in enumerate(rows):
+                mgr.register(slot_idx, req.prompt)  # publish for future hits
+                req.admit_time = admit_time
+                P = len(req.prompt)
+                prompt_toks += P
+                prefill_toks += P - hist
+                shared_toks += hist
+                states[slot_idx] = _Slot(
+                    req=req, t=P, last=int(toks0[j]),
+                    out=list(map(int, req.prompt)) + [int(toks0[j])],
+                    remaining=req.max_new_tokens - 1)
+        return states, deferred, prompt_toks, prefill_toks, shared_toks
+
+    def _run_paged(self, queue: RequestQueue,
+                   clock=time.perf_counter) -> Tuple[Dict[int, np.ndarray], ServingStats]:
+        """The ``run()`` loop over the block-paged pool: admission maps
+        pages instead of copying slot caches, every decode step grows each
+        request by at most one page (``ensure_writable`` — the COW
+        boundary), retire releases pages back to the free list."""
+        sess = self.session
+        B = self.n_slots
+        for req in queue.pending():
+            self._check_fits(req)
+        mgr, holder = self._paged()
+        hits0 = mgr.cache.hits if mgr.cache is not None else 0
+        slots: List[Optional[_Slot]] = [None] * B
+        outputs: Dict[int, np.ndarray] = {}
+        waits: List[float] = []
+        steps = occupied = generated = n_requests = 0
+        prompt_tokens = prefill_tokens = shared_tokens = 0
+        pool_occ = stranded = 0.0
+        t0 = clock()
+
+        def retire(i: int):
+            nonlocal generated
+            st = slots[i]
+            outputs[st.req.rid] = np.asarray(st.out, np.int32)
+            generated += len(st.out) - len(st.req.prompt)
+            mgr.free_slot(i)        # release pages; no device zeroing needed:
+            slots[i] = None         # unmapped rows are masked at read time
+
+        while len(queue) or any(s is not None for s in slots):
+            free = [i for i in range(B) if slots[i] is None]
+            if free and len(queue):
+                assignments = [(i, queue.pop())
+                               for i in free[:min(len(free), len(queue))]]
+                reserved = sum(self._reserve_pages(slots[i].req)
+                               for i in range(B) if slots[i] is not None)
+                admitted, deferred, ptk, ftk, stk = self._admit_many_paged(
+                    mgr, holder, assignments, clock, reserved)
+                for req in reversed(deferred):
+                    queue.push_front(req)
+                if deferred and not admitted and \
+                        all(s is None for s in slots):
+                    raise MemoryError(
+                        f"paged pool ({self.n_pages - 1} pages of "
+                        f"{self.page_size}) cannot admit request "
+                        f"{deferred[0].rid} even with every slot idle — "
+                        "grow n_pages or shrink max_len")
+                prompt_tokens += ptk
+                prefill_tokens += ftk
+                shared_tokens += stk
+                for i, st in admitted.items():
+                    slots[i] = st
+                    waits.append(st.req.admit_time - st.req.submit_time)
+                    n_requests += 1
+                    if self._finished(st):
+                        retire(i)
+
+            active = [i for i in range(B) if slots[i] is not None]
+            if not active:
+                continue
+
+            # next write position must be mapped & exclusively owned (lazy
+            # page growth + the COW copy of shared/registered pages)
+            for i in active:
+                mgr.ensure_writable(i, slots[i].t)
+
+            toks = np.zeros((B,), np.int32)
+            ts = np.zeros((B,), np.int32)
+            for i in active:
+                toks[i] = slots[i].last
+                ts[i] = slots[i].t
+            nxt, holder["pool"] = sess.paged_slot_step(
+                sess.params, jnp.asarray(toks), jnp.asarray(ts),
+                holder["pool"], jnp.asarray(mgr.tables))
+            nxt = np.asarray(nxt)
+            steps += 1
+            occupied += len(active)
+            pool_occ += mgr.pool.n_used / (self.n_pages - 1)
+            live = sum(slots[i].t for i in active)
+            cap = sum(mgr.capacity_tokens(i) for i in active)
+            stranded += 1.0 - live / cap if cap else 0.0
+
+            for i in active:
+                st = slots[i]
+                st.last = int(nxt[i])
+                st.out.append(st.last)
+                st.t += 1
+                st.remaining -= 1
+                if self._finished(st):
+                    retire(i)
+
+        wall = max(clock() - t0, 1e-9)
+        stats = ServingStats(
+            requests=n_requests,
+            generated_tokens=generated,
+            decode_steps=steps,
+            wall_time_s=wall,
+            tok_per_s=generated / wall,
+            occupancy=occupied / (steps * B) if steps else 0.0,
+            mean_queue_wait_s=float(np.mean(waits)) if waits else 0.0,
+            max_queue_depth=queue.max_depth,
+            stranded_fraction=stranded / steps if steps else 0.0,
+            prompt_tokens=prompt_tokens,
+            prefill_tokens=prefill_tokens,
+            page_size=self.page_size,
+            pool_pages=self.n_pages - 1,
+            pool_occupancy=pool_occ / steps if steps else 0.0,
+            prefix_hits=(mgr.cache.hits - hits0 if mgr.cache is not None
+                         else 0),
+            prefix_hit_rate=(shared_tokens / prompt_tokens
+                             if prompt_tokens else 0.0),
         )
         return outputs, stats

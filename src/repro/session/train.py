@@ -57,8 +57,10 @@ class TrainSession:
         if self.plan.pp > 1 and cfg.n_layers % self.plan.pp:
             raise ValueError(
                 f"pp={self.plan.pp} does not divide n_layers={cfg.n_layers}")
-        # the paper's §7 checklist, evaluated once at composition time
-        self.advice: Dict[str, str] = (advisor or RecipeAdvisor()).check(self.plan)
+        # the paper's §7 checklist, evaluated once at composition time; the
+        # data-aware packing hint is folded in when the dataset materializes
+        self._advisor = advisor or RecipeAdvisor()
+        self.advice: Dict[str, str] = self._advisor.check(self.plan)
 
         key = jax.random.PRNGKey(seed)
         if abstract:
@@ -106,6 +108,17 @@ class TrainSession:
                 raise RuntimeError("abstract sessions have no data pipeline")
             dc = self.data_cfg or DataConfig(seq_len=256, global_batch=32)
             self._dataset = make_dataset(dc, self.cfg)
+            if not dc.pack_documents:
+                # data-aware advice: sample one batch, estimate the mean
+                # EOS-delimited document length, and suggest packing when
+                # rows are mostly shorter documents (advice only — never
+                # changes what the session trains on)
+                from repro.data.pipeline import estimate_mean_doc_len
+                sample = self._dataset.batch(0)
+                self.advice.update(self._advisor.check(
+                    self.plan, data_cfg=dc,
+                    mean_doc_len=estimate_mean_doc_len(
+                        sample["tokens"], dc.eos_id)))
         return self._dataset
 
     def batches(self, step: int):

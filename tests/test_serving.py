@@ -240,6 +240,56 @@ def test_prefill_bucketing_bounds_shapes_and_preserves_outputs():
         np.testing.assert_array_equal(a, b)
 
 
+def test_cache_zero_slot_resets_to_init_state():
+    """``cache_zero_slot`` must return a freed slot to its init-cache state
+    (pos → -1, K/V → 0) while leaving every other slot bit-untouched."""
+    from repro.core import stepfn
+    from repro.models import api as model_api
+    sess = _session("granite_3_2b")
+    prompts = jnp.asarray(np.stack(_prompts(sess, (6, 6, 6))), jnp.int32)
+    _, caches = sess.prefill_cache_step(
+        sess.params, {"tokens": prompts}, sess.init_cache(3, 16))
+    zeroed = stepfn.cache_zero_slot(sess.cfg, caches, jnp.int32(1))
+    fresh = sess.init_cache(3, 16)
+    for z, c, f, a in zip(jax.tree_util.tree_leaves(zeroed),
+                          jax.tree_util.tree_leaves(caches),
+                          jax.tree_util.tree_leaves(fresh),
+                          jax.tree_util.tree_leaves(
+                              model_api.cache_slot_axes(sess.cfg, caches))):
+        z, c, f = np.asarray(z), np.asarray(c), np.asarray(f)
+        np.testing.assert_array_equal(np.take(z, 1, axis=a),
+                                      np.take(f, 1, axis=a))
+        for other in (0, 2):
+            np.testing.assert_array_equal(np.take(z, other, axis=a),
+                                          np.take(c, other, axis=a))
+
+
+def test_retired_slot_is_invalidated_before_reuse():
+    """Regression: retire used to only clear host state — the freed slot
+    kept its K/V until the next admission happened to overwrite it.  Retire
+    now zeroes the slot on device, and a request admitted into the
+    just-retired slot still decodes exactly."""
+    sess = _session("granite_3_2b")
+    zero_calls = []
+    inner = sess.zero_slot
+
+    def spy(caches, i):
+        zero_calls.append(int(i))
+        return inner(caches, i)
+
+    sess._zero_slot = spy
+    try:
+        # n_slots=1 forces request 2 through the slot request 1 just freed
+        prompts = _prompts(sess, (7, 5))
+        outs, _ = sess.serve(prompts, [4, 6], n_slots=1, max_len=16)
+    finally:
+        sess._zero_slot = inner
+    assert zero_calls == [0, 0], zero_calls      # one invalidation per retire
+    for p, m, o in zip(prompts, [4, 6], outs):
+        ref = np.asarray(sess.generate(jnp.asarray(p)[None], m)[0])
+        np.testing.assert_array_equal(o, ref)
+
+
 def test_padded_prefill_gate_per_family():
     """Recurrent-state families must NOT bucket (pad tokens would corrupt
     their caches); causal-attention stacks must."""

@@ -144,3 +144,33 @@ def test_session_advice_surfaces_recipe_checklist():
         "granite_3_2b", reduced=True,
         plan=ParallelismConfig(pp=2, gas=2), abstract=True)
     assert "bubble" in sess.advice  # GAS=2 < 4·PP — the paper's Fig 2 rule
+
+
+def test_session_advice_suggests_packing_for_short_documents(tmp_path):
+    """Data-aware advice: an unpacked config over a corpus of short
+    EOS-delimited documents (mean doc ≪ seq_len) gets the pack_documents
+    hint when the dataset materializes; packed (or long-document) configs
+    never do."""
+    from repro.data import DataConfig
+    from repro.data.pipeline import estimate_mean_doc_len
+
+    rng = np.random.RandomState(0)
+    corpus = rng.randint(1, 200, size=8192).astype(np.uint32)
+    corpus[::8] = 0                        # eos every 8 tokens → tiny docs
+    path = tmp_path / "short_docs.bin"
+    corpus.tofile(path)
+    assert estimate_mean_doc_len(corpus[None, :256], 0) < 10
+
+    dc = DataConfig(seq_len=128, global_batch=4, path=str(path))
+    sess = TrainSession.from_recipe("granite_3_2b", reduced=True, data_cfg=dc)
+    assert "pack" not in sess.advice       # data not sampled yet
+    _ = sess.dataset                       # materialize → one sample batch
+    assert "pack" in sess.advice
+    assert "pack_documents" in sess.advice["pack"]
+
+    packed = TrainSession.from_recipe(
+        "granite_3_2b", reduced=True,
+        data_cfg=DataConfig(seq_len=128, global_batch=4, path=str(path),
+                            pack_documents=True))
+    _ = packed.dataset
+    assert "pack" not in packed.advice
