@@ -2,7 +2,7 @@
 micro-benchmarks and end-to-end Session API timings.  Prints
 ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1|fig1|fig2|fig3|bo|fig5|kernels|session|serving]
+  PYTHONPATH=src python -m benchmarks.run [--only table1|fig1|fig2|fig3|bo|fig5|kernels|session|serving|scaling]
 """
 
 from __future__ import annotations
@@ -305,6 +305,73 @@ def serving_bench():
     return rows
 
 
+def scaling_bench():
+    """Weak/strong scaling sweep under the cost model at the paper's 128-node
+    recipe points (Fig 5): the 175B recipe (TP=8, PP=16, MBS=3) scaled 1→8×
+    from its 16-node base, plain schedule vs interleaved virtual stages +
+    overlapped ZeRO (``vpp``/``overlap_zero``).  Rows stream through the
+    session ``JsonlTracker`` (BENCH_scaling.jsonl) and the summary lands in
+    ``BENCH_scaling.json`` for ``tests/test_paper_claims.py`` and CI."""
+    import dataclasses
+    import json
+    from pathlib import Path
+
+    from repro.configs import get_config
+    from repro.core.recipe import ParallelismConfig, RecipeAdvisor
+    from repro.core.scaling import scaling_curve
+    from repro.core.systems import SMNG_P2
+    from repro.session.tracker import JsonlTracker
+
+    cfg = get_config("gpt_175b")
+    # the interleaved rotation needs gas % pp == 0: 96 is the nearest
+    # schedule-legal GAS to the paper's 100 (bubble difference < 0.1 pp)
+    plain = ParallelismConfig(tp=8, pp=16, dp=1, mbs=3, gas=96, zero_stage=1)
+    vpp = RecipeAdvisor.suggest_vpp(cfg.n_layers, plain.pp, plain.gas)
+    inter = dataclasses.replace(plain, vpp=vpp, overlap_zero=True)
+
+    root = Path(__file__).resolve().parent.parent
+    jsonl = root / "BENCH_scaling.jsonl"
+    jsonl.unlink(missing_ok=True)
+    tracker = JsonlTracker(jsonl)
+
+    rows, curves, i = [], {}, 0
+    for label, base in (("plain", plain), ("interleaved", inter)):
+        for kind in ("weak", "strong"):
+            curve = scaling_curve(cfg, base, kind=kind, system=SMNG_P2,
+                                  factors=(1, 2, 4, 8))
+            curves[f"{label}_{kind}"] = curve
+            for r in curve:
+                tracker.log_metrics(i, {"schedule": label, "kind": kind, **r})
+                i += 1
+            last = curve[-1]
+            rows.append((f"scaling/{label}_{kind}_x{last['factor']}",
+                         last["step_time_s"] * 1e6,
+                         f"eff={last['efficiency']:.1%} "
+                         f"devices={last['devices']} "
+                         f"bubble={last['bubble']:.3f}"))
+    tracker.finish()
+
+    bench = {
+        "suite": "scaling",
+        "model": cfg.name,
+        "system": SMNG_P2.name,
+        "base": {"tp": plain.tp, "pp": plain.pp, "mbs": plain.mbs,
+                 "gas": plain.gas, "zero_stage": plain.zero_stage},
+        "interleaved": {"vpp": inter.vpp, "overlap_zero": inter.overlap_zero},
+        "curves": curves,
+        "paper_claims": {"weak_x8": 0.93, "strong_x8": 0.82},
+        "weak_eff_x8": round(curves["interleaved_weak"][-1]["efficiency"], 4),
+        "strong_eff_x8": round(curves["interleaved_strong"][-1]["efficiency"], 4),
+    }
+    (root / "BENCH_scaling.json").write_text(json.dumps(bench, indent=1) + "\n")
+    rows.append(("scaling/verdict", 0.0,
+                 f"interleaved weak_x8={bench['weak_eff_x8']:.1%} "
+                 f"strong_x8={bench['strong_eff_x8']:.1%} "
+                 f"(paper: 93%/82%; plain strong_x8="
+                 f"{curves['plain_strong'][-1]['efficiency']:.1%})"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -316,6 +383,7 @@ def main() -> None:
     suites["kernels"] = kernel_microbench
     suites["session"] = session_bench
     suites["serving"] = serving_bench
+    suites["scaling"] = scaling_bench
 
     if args.only is not None and args.only not in suites:
         sys.exit(f"unknown suite {args.only!r}; valid: "

@@ -23,7 +23,7 @@ def canonicalize_state(state: Dict[str, Any], plan: ParallelismConfig) -> Dict[s
     def fix(tree):
         if isinstance(tree, dict) and "blocks" in tree:
             tree = dict(tree)
-            tree["blocks"] = unstack_from_pipeline(tree["blocks"])
+            tree["blocks"] = unstack_from_pipeline(tree["blocks"], plan.vpp)
         return tree
     out = dict(state)
     out["params"] = fix(state["params"])
@@ -41,7 +41,8 @@ def reshard_state(state: Dict[str, Any], new_plan: ParallelismConfig) -> Dict[st
     def fix(tree):
         if isinstance(tree, dict) and "blocks" in tree:
             tree = dict(tree)
-            tree["blocks"] = stack_for_pipeline(tree["blocks"], new_plan.pp)
+            tree["blocks"] = stack_for_pipeline(tree["blocks"], new_plan.pp,
+                                                new_plan.vpp)
         return tree
     out = dict(state)
     out["params"] = fix(state["params"])

@@ -3,14 +3,19 @@ the BO objective (§5).  All terms are plain napkin math over hardware
 constants; the dry-run roofline (benchmarks/roofline.py) is the compiled-HLO
 counterpart for the TPU target.
 
-Terms modeled per optimizer step under 1F1B with GAS micro-batches:
+Terms modeled per optimizer step under (interleaved) 1F1B with GAS
+micro-batches and VPP virtual stages per physical stage:
   compute   : 6·N_active·tokens (+attention) with remat multiplier & GEMM eff
   TP comm   : 4 all-reduces/layer of (mbs·s·d) activations — domain-aware BW
               (the paper's Fig-1 cliff when TP crosses the fast domain)
-  PP p2p    : 2 boundary transfers per micro-batch per stage
-  bubble    : (PP-1)/(GAS+PP-1)  — the paper's PP/M law
-  DP sync   : ZeRO-1 reduce-scatter(grads) + all-gather(params), partly
-              overlapped with the pipeline flush
+  PP p2p    : 2 boundary transfers per superstep per stage — VPP·GAS+PP-1
+              supersteps, so interleaving multiplies P2P traffic ~VPP×
+  bubble    : (PP-1)/(VPP·GAS+PP-1)  — the paper's PP/M law, divided by the
+              virtual-stage count (Megatron interleaved-1F1B)
+  DP sync   : ZeRO-1 reduce-scatter(grads) + all-gather(params); with
+              ``plan.overlap_zero`` the async collectives hide under stage
+              compute up to the compute time (``t_overlap``), otherwise a
+              fixed ``dp_overlap`` fraction overlaps the pipeline flush
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ class StepCost:
     t_tp: float
     t_pp: float
     t_dp_exposed: float
+    t_overlap: float             # ZeRO collective time hidden under compute
     t_step: float
     bubble: float
     model_tflops_per_device: float
@@ -130,14 +136,15 @@ def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
     flops_replica = fpt * tokens_replica
     remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[plan.remat_policy]
 
-    # --- compute (per micro-batch, per device) ---
+    # --- compute (per superstep = one chunk of one micro-batch, per device) ---
     m_dim = plan.mbs * seq                        # GEMM token dim per device
     eff = system.gemm_eff * m_dim / (m_dim + system.eff_knee_m)
-    flops_micro_dev = flops_replica * remat_mult / plan.gas / plan.pp / plan.tp
-    t_compute_micro = flops_micro_dev / (system.peak_flops * eff)
+    flops_chunk_dev = (flops_replica * remat_mult
+                       / plan.gas / plan.pp / plan.vpp / plan.tp)
+    t_compute_chunk = flops_chunk_dev / (system.peak_flops * eff)
 
-    # --- TP collectives (per micro-batch, per stage) ---
-    layers_stage = cfg.n_layers / plan.pp
+    # --- TP collectives (per chunk, per stage) ---
+    layers_chunk = cfg.n_layers / plan.pp / plan.vpp
     if plan.tp > 1:
         ar_bytes = plan.mbs * seq * cfg.d_model * 2.0
         crosses_pod = plan.tp > (system.pod_size or 1 << 30)
@@ -146,20 +153,21 @@ def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
         t_ar = 2.0 * (plan.tp - 1) / plan.tp * ar_bytes / bw
         if plan.sequence_parallel:
             t_ar *= 0.75                           # RS+AG overlap better than AR
-        t_tp_micro = layers_stage * n_coll * t_ar
+        t_tp_chunk = layers_chunk * n_coll * t_ar
     else:
-        t_tp_micro = 0.0
+        t_tp_chunk = 0.0
 
-    # --- PP point-to-point (per micro-batch, per boundary) ---
+    # --- PP point-to-point (per superstep, per boundary) — a micro-batch
+    # loops the ring VPP times, so interleaving costs ~VPP× the P2P bytes ---
     if plan.pp > 1:
         p2p_bytes = plan.mbs * seq * cfg.d_model * 2.0
-        t_pp_micro = 2.0 * p2p_bytes / system.slow_bw
+        t_pp_chunk = 2.0 * p2p_bytes / system.slow_bw
     else:
-        t_pp_micro = 0.0
+        t_pp_chunk = 0.0
 
-    # --- 1F1B assembly ---
-    supersteps = plan.gas + plan.pp - 1
-    t_pipe = supersteps * (t_compute_micro + t_tp_micro + t_pp_micro)
+    # --- (interleaved) 1F1B assembly: VPP·GAS + PP - 1 chunk supersteps ---
+    supersteps = plan.vpp * plan.gas + plan.pp - 1
+    t_pipe = supersteps * (t_compute_chunk + t_tp_chunk + t_pp_chunk)
     bubble = plan.bubble_fraction
 
     # --- ZeRO-DP sync ---
@@ -173,7 +181,15 @@ def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
         t_dp = 2.0 * shard * (dpw - 1) / dpw / bw             # RS + AG
     else:
         t_dp = 0.0
-    t_dp_exposed = t_dp * (1.0 - dp_overlap)
+    if plan.overlap_zero:
+        # async gather/scatter streams behind the superstep compute: the
+        # hideable budget is the step's compute time itself (link and HBM
+        # traffic contend beyond that) — the remainder stays exposed
+        t_overlap = min(t_dp, supersteps * t_compute_chunk)
+        t_dp_exposed = t_dp - t_overlap
+    else:
+        t_overlap = t_dp * dp_overlap              # pipeline-flush overlap only
+        t_dp_exposed = t_dp * (1.0 - dp_overlap)
 
     t_step = t_pipe + t_dp_exposed
 
@@ -188,10 +204,11 @@ def estimate_step(cfg: ModelConfig, plan: ParallelismConfig, *,
     useful = fpt * tokens_replica * plan.dp * plan.pods       # no remat multiplier
     tflops_dev = useful / t_step / plan.world / 1e12
     return StepCost(
-        t_compute=supersteps * t_compute_micro,
-        t_tp=supersteps * t_tp_micro,
-        t_pp=supersteps * t_pp_micro,
+        t_compute=supersteps * t_compute_chunk,
+        t_tp=supersteps * t_tp_chunk,
+        t_pp=supersteps * t_pp_chunk,
         t_dp_exposed=t_dp_exposed,
+        t_overlap=t_overlap,
         t_step=t_step,
         bubble=bubble,
         model_tflops_per_device=tflops_dev,

@@ -135,12 +135,15 @@ PARAM_RULES = [
 
 def spec_for_path(path: str, shape: Tuple[int, ...], *, stacked_axes: int = 0) -> Tuple[Optional[str], ...]:
     """Logical axes for a parameter; ``stacked_axes`` leading axes are
-    (stage, layers) from pipeline/scan stacking."""
+    (layers) / (stage, layers) / (chunks, stage, layers) from scan, pipeline,
+    and interleaved virtual-stage stacking respectively."""
     prefix: Tuple[Optional[str], ...] = ()
     if stacked_axes == 1:
         prefix = ("layers",)
     elif stacked_axes == 2:
         prefix = ("stage", "layers")
+    elif stacked_axes == 3:
+        prefix = ("chunks", "stage", "layers")
     for pat, axes in PARAM_RULES:
         if re.search(pat, path):
             axes = tuple(axes)

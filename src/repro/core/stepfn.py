@@ -36,7 +36,8 @@ def init_state(cfg: ModelConfig, plan: ParallelismConfig, key,
                train_cfg: TrainConfig = TrainConfig()) -> Dict[str, Any]:
     params = model_api.init_params(cfg, key)
     if plan.pp > 1 and "blocks" in params:
-        params["blocks"] = pp_mod.stack_for_pipeline(params["blocks"], plan.pp)
+        params["blocks"] = pp_mod.stack_for_pipeline(params["blocks"], plan.pp,
+                                                     plan.vpp)
     state = {"params": params, "opt": adamw.init_opt_state(params),
              "step": jnp.zeros((), jnp.int32)}
     if train_cfg.compression == "int8_ef":
@@ -120,6 +121,17 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
             return loss, metrics, grads
         gas = plan.gas
 
+        # overlap_zero: constrain the accumulator to the ZeRO shard inside the
+        # scan so XLA reduce-scatters each micro-batch's contribution behind
+        # the NEXT micro-batch's compute, instead of one bulk reduce-scatter
+        # exposed at step end (the Frontier async-collective tuning; the cost
+        # model's ``t_overlap`` term is the analytic mirror of this).
+        micro_constraint = None
+        if (plan.overlap_zero and mesh is not None and plan.zero_stage >= 2):
+            p_sh = zero.param_shardings(cfg, params, mesh, plan)
+            o_sh = zero.opt_shardings(p_sh, params, mesh, plan)
+            micro_constraint = lambda g: zero.grad_constraint(g, mesh, plan, o_sh)
+
         def to_micro(x):
             if x.shape[0] % gas:
                 raise ValueError(
@@ -149,6 +161,8 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
                 loss_fn, has_aux=True)(params, mb)
             g_acc = jax.tree_util.tree_map(
                 lambda a, gi: a + (gi * wi).astype(a.dtype), g_acc, g)
+            if micro_constraint is not None:
+                g_acc = micro_constraint(g_acc)
             return g_acc, (loss, metrics)
 
         g0 = jax.tree_util.tree_map(

@@ -27,12 +27,19 @@ from repro.models.config import ModelConfig
 
 
 def stacked_axes_fn(cfg: ModelConfig, plan: ParallelismConfig):
-    """How many leading stacking axes a given param path has."""
+    """How many leading stacking axes a given param path has.
+
+    Plan-dependent: plain scanned stacks have 1 (layers), pipeline stacks 2
+    (stage, layers), interleaved virtual-stage stacks 3 (chunks, stage,
+    layers) — the chunk axis is never sharded (chunks co-reside on their
+    physical stage's devices)."""
     def f(path: str) -> int:
         if "enc_blocks" in path or "dec_blocks" in path:
             return 1
         if path.startswith("blocks") or "/blocks" in path:
-            return 2 if plan.pp > 1 else 1
+            if plan.pp > 1:
+                return 3 if plan.vpp > 1 else 2
+            return 1
         return 0
     return f
 

@@ -39,9 +39,13 @@ class Preempted(Exception):
 def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
                  *, plan: ParallelismConfig = ParallelismConfig(),
                  log: Callable[[str], None] = print,
+                 tracker=None,
                  fail_at_step: Optional[int] = None) -> Dict[str, Any]:
     """Run (or resume) training. ``batches(step)`` → batch dict.
 
+    ``tracker`` is any ``session.tracker.Tracker`` — every logged step's
+    metrics stream through it (and ``finish()`` runs on the way out, also on
+    preemption, so file-backed trackers keep what was logged).
     ``fail_at_step`` injects a crash (tests the restart path).
     Returns {state, metrics_history, resumed_from}.
     """
@@ -81,6 +85,8 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
             if step % loop_cfg.log_every == 0:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()}
                 history.append({"step": step, **m})
+                if tracker is not None:
+                    tracker.log_metrics(step, m)
                 log(f"[loop] step {step}: " +
                     " ".join(f"{k}={v:.4g}" for k, v in m.items()))
             if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
@@ -103,6 +109,8 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
         if pending_writer is not None:
             pending_writer.join()
         signal.signal(signal.SIGTERM, old_handler)
+        if tracker is not None:
+            tracker.finish()
 
     return {"state": state, "history": history, "resumed_from": resumed_from,
             "stragglers": stragglers}

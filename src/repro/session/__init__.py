@@ -16,3 +16,5 @@ from repro.session.scheduler import (  # noqa: F401
     ContinuousBatchingScheduler, Request, RequestQueue, ServingStats)
 from repro.session.kvpool import (  # noqa: F401
     PagedKVManager, PagePool, PrefixCache)
+from repro.session.tracker import (  # noqa: F401
+    CompositeTracker, InMemoryTracker, JsonlTracker, NullTracker, Tracker)

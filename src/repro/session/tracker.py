@@ -1,0 +1,101 @@
+"""Pluggable metrics trackers for the training loop and benchmarks.
+
+A tracker is anything with ``log_metrics(step, metrics)`` / ``finish()`` —
+the protocol is deliberately tiny so wandb/tensorboard adapters are a dozen
+lines.  ``TrainSession.run(tracker=...)`` threads one through the
+fault-tolerant loop (every logged step lands in the tracker as well as the
+returned history), and the scaling bench streams its sweep rows through a
+``JsonlTracker``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Protocol, Sequence, Union, runtime_checkable
+
+import numpy as np
+
+Scalar = Union[int, float]
+
+
+@runtime_checkable
+class Tracker(Protocol):
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        """Record one step's scalar metrics."""
+
+    def finish(self) -> None:
+        """Flush and release resources; the tracker may not be used after."""
+
+
+def _scalarize(metrics: Dict[str, object]) -> Dict[str, Scalar]:
+    """Coerce jax/numpy 0-d leaves to plain python scalars (JSON-safe)."""
+    out: Dict[str, Scalar] = {}
+    for k, v in metrics.items():
+        if isinstance(v, (int, float, str, bool)) or v is None:
+            out[k] = v
+        else:
+            out[k] = float(np.asarray(v))
+    return out
+
+
+class NullTracker:
+    """Default no-op sink."""
+
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        pass
+
+    def finish(self) -> None:
+        pass
+
+
+class JsonlTracker:
+    """Append-only JSONL file: one ``{"step": ..., **metrics}`` object per
+    line.  Opens lazily, flushes per line (a preempted run keeps every logged
+    step), and is idempotent under ``finish()``."""
+
+    def __init__(self, path: Union[str, Path]):
+        self.path = Path(path)
+        self._fh = None
+
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        if self._fh is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = self.path.open("a")
+        self._fh.write(json.dumps({"step": int(step), **_scalarize(metrics)})
+                       + "\n")
+        self._fh.flush()
+
+    def finish(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+class InMemoryTracker:
+    """Keeps rows in a list — handy for tests and ad-hoc analysis."""
+
+    def __init__(self):
+        self.rows = []
+        self.finished = False
+
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        self.rows.append({"step": int(step), **_scalarize(metrics)})
+
+    def finish(self) -> None:
+        self.finished = True
+
+
+class CompositeTracker:
+    """Fan one stream of metrics out to several trackers."""
+
+    def __init__(self, trackers: Sequence[Tracker]):
+        self.trackers = list(trackers)
+
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        for t in self.trackers:
+            t.log_metrics(step, metrics)
+
+    def finish(self) -> None:
+        for t in self.trackers:
+            t.finish()

@@ -54,13 +54,13 @@ class TrainSession:
         self.data_cfg = data_cfg
         self.mesh = mesh
         self.abstract = abstract
-        if self.plan.pp > 1 and cfg.n_layers % self.plan.pp:
-            raise ValueError(
-                f"pp={self.plan.pp} does not divide n_layers={cfg.n_layers}")
+        if self.plan.pp > 1:
+            self.plan.validate(cfg.n_layers)   # pp·vpp layout + gas%pp rules
         # the paper's §7 checklist, evaluated once at composition time; the
         # data-aware packing hint is folded in when the dataset materializes
         self._advisor = advisor or RecipeAdvisor()
-        self.advice: Dict[str, str] = self._advisor.check(self.plan)
+        self.advice: Dict[str, str] = self._advisor.check(
+            self.plan, n_layers=cfg.n_layers)
 
         key = jax.random.PRNGKey(seed)
         if abstract:
@@ -148,9 +148,12 @@ class TrainSession:
             ckpt_dir=None, ckpt_every: int = 50,
             log_every: Optional[int] = None, keep_ckpts: int = 3,
             async_ckpt: bool = True, fail_at_step: Optional[int] = None,
-            log=print) -> Dict[str, Any]:
+            tracker=None, log=print) -> Dict[str, Any]:
         """Fault-tolerant training to ``steps`` (default: the schedule length):
-        restore → train → periodic atomic checkpoint → preemption handling."""
+        restore → train → periodic atomic checkpoint → preemption handling.
+
+        ``tracker`` is any ``session.tracker.Tracker`` (e.g. ``JsonlTracker``);
+        every logged step's metrics stream through it."""
         if self.abstract:
             raise RuntimeError("abstract sessions cannot run; use .lower()")
         if self._next_step:
@@ -165,7 +168,8 @@ class TrainSession:
             log_every=log_every if log_every is not None else max(1, total // 20),
             keep_ckpts=keep_ckpts, async_ckpt=async_ckpt)
         out = run_training(self.state, self.train_step, self.batches, loop_cfg,
-                           plan=self.plan, log=log, fail_at_step=fail_at_step)
+                           plan=self.plan, log=log, tracker=tracker,
+                           fail_at_step=fail_at_step)
         self.state = out["state"]
         self._next_step = total
         return out

@@ -133,6 +133,89 @@ def test_fig5_strong_scaling_band():
     assert eff < _scaling("weak", 8), "strong must trail weak (paper Fig 5)"
 
 
+def _recipe_curve(kind: str, **plan_kw):
+    from repro.core.scaling import scaling_curve
+    cfg = get_config("gpt_175b")
+    # gas=96 (not 100): the interleaved rotation requires gas % pp == 0
+    base = ParallelismConfig(tp=8, pp=16, dp=1, mbs=3, gas=96, zero_stage=1,
+                             **plan_kw)
+    return scaling_curve(cfg, base, kind=kind, system=SMNG_P2,
+                         factors=(1, 2, 4, 8))
+
+
+def test_fig5_recipe_point_weak_93pct():
+    """Interleaved schedule + overlapped ZeRO hits the paper's ≥93% weak
+    scaling at the 128-node recipe point (8× the 16-node base)."""
+    curve = _recipe_curve("weak", vpp=3, overlap_zero=True)
+    assert curve[0]["efficiency"] == 1.0
+    assert curve[-1]["devices"] == 1024
+    assert curve[-1]["efficiency"] >= 0.90, \
+        f"weak x8 eff {curve[-1]['efficiency']:.1%} (paper: 93%)"
+
+
+def test_fig5_recipe_point_strong_82pct():
+    curve = _recipe_curve("strong", vpp=3, overlap_zero=True)
+    assert curve[-1]["efficiency"] >= 0.80, \
+        f"strong x8 eff {curve[-1]['efficiency']:.1%} (paper: 82%)"
+    # strong scaling holds the global batch ~fixed (GAS rounding and the
+    # vpp gas%pp trim allow small drift — efficiency is per-token so the
+    # drift can't inflate the score) and the step must get faster
+    assert 0.85 <= curve[-1]["tokens_per_step"] / curve[0]["tokens_per_step"] <= 1.05
+    assert curve[-1]["step_time_s"] < curve[0]["step_time_s"]
+
+
+def test_fig5_interleaving_beats_plain_strong():
+    """The paper's strong-scaling claim is unreachable with the plain 1F1B
+    schedule: stretching DP 8× shrinks per-replica GAS and inflates the
+    bubble; interleaving (vpp>1) claws the efficiency back."""
+    plain = _recipe_curve("strong", vpp=1)[-1]
+    inter = _recipe_curve("strong", vpp=3, overlap_zero=True)[-1]
+    assert plain["bubble"] > inter["bubble"]
+    assert plain["efficiency"] < 0.80 < inter["efficiency"]
+
+
+def test_strong_plan_refuses_draining_the_pipeline():
+    """Strong scaling divides GAS across new replicas; once gas < pp the
+    pipeline can't fill and the plan is garbage — refuse, don't emit it."""
+    from repro.core.scaling import strong_plan
+    base = ParallelismConfig(tp=8, pp=16, dp=1, mbs=3, gas=96)
+    with pytest.raises(ValueError, match="fill"):
+        strong_plan(base, 32)   # mbs 3→1, gas 96/(32/3)≈9 < pp=16
+    ok = strong_plan(base, 8)   # mbs 3→1, gas 96/(8/3)=36 — legal
+    assert ok.gas == 36 and ok.mbs == 1 and ok.dp == 8
+    # vpp>1 additionally trims gas to a multiple of pp
+    vbase = ParallelismConfig(tp=8, pp=4, dp=1, mbs=1, gas=24, vpp=2)
+    assert strong_plan(vbase, 2).gas == 12   # already divisible
+    vbase2 = ParallelismConfig(tp=8, pp=4, dp=1, mbs=1, gas=36, vpp=2)
+    assert strong_plan(vbase2, 2).gas == 16  # 18 → trimmed to 16
+
+
+def test_scaling_curve_throughput_from_step_time():
+    """Satellite regression: per-device throughput must derive from the
+    estimated step time (tokens / t / world), not model_tflops_per_device."""
+    from repro.core.scaling import scaling_curve
+    cfg = get_config("gpt_175b")
+    base = ParallelismConfig(tp=8, pp=16, dp=1, mbs=3, gas=96, zero_stage=1)
+    row = scaling_curve(cfg, base, kind="weak", system=SMNG_P2,
+                        factors=(1,))[0]
+    want = row["tokens_per_step"] / row["step_time_s"] / row["devices"]
+    assert row["per_device_throughput"] == pytest.approx(want)
+
+
+def test_bench_scaling_artifact_when_present():
+    """CI emits BENCH_scaling.json via `benchmarks.run --only scaling`; when
+    the artifact exists, its recorded efficiencies must meet the bands."""
+    import json
+    from pathlib import Path
+    path = Path(__file__).resolve().parent.parent / "BENCH_scaling.json"
+    if not path.exists():
+        pytest.skip("BENCH_scaling.json not generated (run --only scaling)")
+    bench = json.loads(path.read_text())
+    assert bench["weak_eff_x8"] >= 0.90
+    assert bench["strong_eff_x8"] >= 0.80
+    assert len(bench["curves"]["interleaved_weak"]) == 4
+
+
 # --- C6: checklist advisor -----------------------------------------------------
 
 def test_advisor_flags_cross_node_tp():

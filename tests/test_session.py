@@ -174,3 +174,49 @@ def test_session_advice_suggests_packing_for_short_documents(tmp_path):
                             pack_documents=True))
     _ = packed.dataset
     assert "pack" not in packed.advice
+
+
+# ---------------------------------------------------------------------------
+# Metrics trackers: every logged step streams through the tracker protocol
+# ---------------------------------------------------------------------------
+
+def test_run_streams_metrics_through_tracker(tmp_path):
+    import json
+
+    from repro.session import (CompositeTracker, InMemoryTracker,
+                               JsonlTracker, Tracker)
+
+    mem = InMemoryTracker()
+    jsonl = JsonlTracker(tmp_path / "metrics.jsonl")
+    assert isinstance(mem, Tracker) and isinstance(jsonl, Tracker)
+
+    out = _session(6).run(log_every=2,
+                          tracker=CompositeTracker([mem, jsonl]))
+    assert mem.finished
+    assert [r["step"] for r in mem.rows] == [0, 2, 4]
+    # tracker rows mirror the returned history exactly
+    for got, want in zip(mem.rows, out["history"]):
+        assert got == {k: float(v) if k != "step" else v
+                       for k, v in want.items()}
+    lines = [json.loads(l) for l in
+             (tmp_path / "metrics.jsonl").read_text().splitlines()]
+    assert lines == mem.rows
+    assert all(isinstance(r["loss"], float) for r in lines)
+
+
+def test_jsonl_tracker_appends_and_is_idempotent(tmp_path):
+    import json
+
+    from repro.session import JsonlTracker
+
+    path = tmp_path / "m.jsonl"
+    t = JsonlTracker(path)
+    t.log_metrics(0, {"loss": np.float32(1.5), "acc": 0.25})
+    t.finish()
+    t.finish()  # idempotent
+    t2 = JsonlTracker(path)  # new run appends, never truncates
+    t2.log_metrics(1, {"loss": 1.0})
+    t2.finish()
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert rows == [{"step": 0, "loss": 1.5, "acc": 0.25},
+                    {"step": 1, "loss": 1.0}]
