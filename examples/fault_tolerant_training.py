@@ -1,6 +1,8 @@
 """Scenario: fault-tolerant training through ``TrainSession`` — crash
 mid-run, restart, verify the resumed run continues bit-exactly; then rescale
-the pipeline (elastic restore under a different PP).
+the pipeline (elastic restore under a different PP); finally inject NaN
+gradients with the chaos harness and watch the resilience layer skip the
+anomalous steps and roll back to the last good checkpoint.
 
   PYTHONPATH=src python examples/fault_tolerant_training.py
 """
@@ -17,17 +19,18 @@ import numpy as np
 from repro.core import stepfn
 from repro.core.recipe import ParallelismConfig
 from repro.data import DataConfig
+from repro.runtime.chaos import FaultPlan
 from repro.session import TrainSession
 
 
-def run(ckpt_dir, steps, fail_at=None, pp=1):
+def run(ckpt_dir, steps, chaos=None, pp=1):
     sess = TrainSession.from_recipe(
         "granite_3_2b", reduced=True,
         plan=ParallelismConfig(pp=pp, gas=max(2, pp)),
         train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=2, total_steps=steps),
         data_cfg=DataConfig(seq_len=64, global_batch=8))
     return sess.run(steps, ckpt_dir=ckpt_dir, ckpt_every=5, log_every=10,
-                    async_ckpt=False, fail_at_step=fail_at)
+                    async_ckpt=False, chaos=chaos)
 
 
 def main():
@@ -38,7 +41,7 @@ def main():
 
         print("=== run B: crash at step 12 ===")
         try:
-            run(tmp / "b", 20, fail_at=12)
+            run(tmp / "b", 20, chaos=FaultPlan(crash_at=12))
         except RuntimeError as e:
             print("crashed as injected:", e)
 
@@ -57,6 +60,14 @@ def main():
         out = run(tmp / "b", 22, pp=2)  # re-plans the stack as (2, L/2, ...)
         print("continued under pp=2 to step 22, loss:",
               out["history"][-1]["loss"] if out["history"] else "n/a")
+
+        print("=== chaos: NaN gradients at data 12-14 → skip, skip, rollback ===")
+        chaos = FaultPlan(nan_grad_steps=(12, 13, 14))
+        out = run(tmp / "c", 20, chaos=chaos)
+        print(f"skipped {out['skipped_steps']} anomalous steps, "
+              f"{out['rollbacks']} rollback(s), data cursor +{out['data_offset']}")
+        for e in out["events"]:
+            print(f"  event step={e.step} kind={e.kind} {e.detail}")
 
 
 if __name__ == "__main__":

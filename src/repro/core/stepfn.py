@@ -21,6 +21,7 @@ from repro.models import api as model_api
 from repro.models.config import ModelConfig
 from repro.optim import adamw, schedule
 from repro.optim.compress import apply_compression, init_error_feedback
+from repro.runtime.resilience import ResilienceConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +31,18 @@ class TrainConfig:
     total_steps: int = 10000
     adam: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
     compression: Optional[str] = None      # None | bf16 | int8_ef
+    resilience: ResilienceConfig = dataclasses.field(
+        default_factory=ResilienceConfig)
+
+
+def init_rstat() -> Dict[str, jax.Array]:
+    """Resilience stats carried in the train state (so they checkpoint,
+    reshard, and roll back with everything else): EMA/variance of accepted
+    grad-norms, accepted-step count, and the LR re-warm countdown."""
+    return {"ema": jnp.zeros((), jnp.float32),
+            "var": jnp.zeros((), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "rewarm": jnp.zeros((), jnp.int32)}
 
 
 def init_state(cfg: ModelConfig, plan: ParallelismConfig, key,
@@ -39,7 +52,7 @@ def init_state(cfg: ModelConfig, plan: ParallelismConfig, key,
         params["blocks"] = pp_mod.stack_for_pipeline(params["blocks"], plan.pp,
                                                      plan.vpp)
     state = {"params": params, "opt": adamw.init_opt_state(params),
-             "step": jnp.zeros((), jnp.int32)}
+             "step": jnp.zeros((), jnp.int32), "rstat": init_rstat()}
     if train_cfg.compression == "int8_ef":
         state["ef"] = init_error_feedback(params)
     return state
@@ -55,6 +68,9 @@ def state_shardings(cfg: ModelConfig, state, mesh: Mesh, plan: ParallelismConfig
     }
     out = {"params": p_sh, "opt": o_sh,
            "step": NamedSharding(mesh, P())}
+    if "rstat" in state:
+        out["rstat"] = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), state["rstat"])
     if "ef" in state:
         out["ef"] = zero.opt_shardings(p_sh, state["params"], mesh, plan)
     return out
@@ -106,19 +122,35 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
 
     n_groups = plan.dp * plan.pods if mesh is not None else 1
 
-    def grads_and_metrics(params, batch):
-        """(loss, metrics, grads), honoring ``plan.gas`` on the pp=1 path.
+    def grads_and_metrics(params, batch, chaos_scale=None):
+        """(loss, metrics, grads, anomaly-aux), honoring ``plan.gas`` on the
+        pp=1 path.
 
         The pipeline folds GAS into its superstep schedule
         (``pipeline_loss``); without a pipeline we scan over micro-batches
         and accumulate gradients in the compute dtype (the paper's Table-1
         "2 B" bf16 gradient buffer), so ``RecipeAdvisor.suggest``'s
         ``min_gas=8`` plans train the effective batch they claim instead of
-        silently collapsing to one big micro-batch."""
+        silently collapsing to one big micro-batch.
+
+        Anomaly signals ride along at zero extra sync cost: each path also
+        returns ``aux = {"usable", "nonfinite_micros"}``.  On the GAS path a
+        non-finite micro-batch is masked out of the accumulation (and the
+        micro weights renormalized over the survivors) instead of poisoning
+        the whole step; ``usable`` goes False only when every micro-batch is
+        bad.  ``chaos_scale`` is the fault-injection harness' per-micro
+        gradient multiplier (``runtime.chaos.FaultPlan``)."""
         if plan.pp > 1 or plan.gas <= 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
-            return loss, metrics, grads
+            if chaos_scale is not None:
+                s = jnp.prod(chaos_scale.astype(jnp.float32))
+                grads = jax.tree_util.tree_map(
+                    lambda g: (g * s).astype(g.dtype), grads)
+            usable = jnp.isfinite(adamw.global_norm(grads))
+            aux = {"usable": usable,
+                   "nonfinite_micros": (~usable).astype(jnp.int32)}
+            return loss, metrics, grads, aux
         gas = plan.gas
 
         # overlap_zero: constrain the accumulator to the ZeRO shard inside the
@@ -155,28 +187,99 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
                          jnp.float32)
         wn = w * (gas / jnp.maximum(jnp.sum(w), 1.0))
 
+        if chaos_scale is not None:
+            chaos_scale = jnp.broadcast_to(
+                chaos_scale.astype(jnp.float32), (gas,))
+        else:
+            chaos_scale = jnp.ones((gas,), jnp.float32)
+
         def one(g_acc, mb_wn):
-            mb, wi = mb_wn
+            mb, wi, si = mb_wn
             (loss, metrics), g = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mb)
+            g = jax.tree_util.tree_map(lambda x: (x * si).astype(x.dtype), g)
+            # per-micro finite gate: a single poisoned micro-batch (bad shard,
+            # fp blow-up) is dropped from the accumulation instead of taking
+            # the whole effective batch down with it
+            fin = jnp.isfinite(adamw.global_norm(g))
             g_acc = jax.tree_util.tree_map(
-                lambda a, gi: a + (gi * wi).astype(a.dtype), g_acc, g)
+                lambda a, gi: a + jnp.where(fin, (gi * wi).astype(a.dtype),
+                                            jnp.zeros((), a.dtype)),
+                g_acc, g)
             if micro_constraint is not None:
                 g_acc = micro_constraint(g_acc)
-            return g_acc, (loss, metrics)
+            return g_acc, (loss, metrics, fin)
 
         g0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, acc_dt), params)
-        g_acc, (losses, metricses) = jax.lax.scan(one, g0, (micro, wn))
-        grads = jax.tree_util.tree_map(lambda g: g / gas, g_acc)
+        g_acc, (losses, metricses, fins) = jax.lax.scan(
+            one, g0, (micro, wn, chaos_scale))
+        all_fin = jnp.all(fins)
+        wn_live = wn * fins.astype(jnp.float32)
+        # bit-exact with the historic unmasked accumulation when every micro
+        # is finite (sum(wn) == gas by construction): only a masked step pays
+        # the renormalized denominator
+        denom = jnp.where(all_fin, jnp.float32(gas),
+                          jnp.maximum(jnp.sum(wn_live), 1e-6))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g / denom).astype(g.dtype), g_acc)
         metrics = jax.tree_util.tree_map(
-            lambda x: jnp.mean(x * wn.astype(x.dtype), axis=0), metricses)
-        return jnp.mean(losses * wn), metrics, grads
+            lambda x: jnp.sum(jnp.where(fins, x * wn.astype(x.dtype),
+                                        jnp.zeros((), x.dtype)), axis=0)
+            / denom.astype(x.dtype), metricses)
+        loss = jnp.sum(jnp.where(fins, losses * wn, 0.0)) / denom
+        usable = jnp.any(fins)
+        loss = jnp.where(usable, loss, jnp.float32(jnp.nan))
+        aux = {"usable": usable,
+               "nonfinite_micros": jnp.sum((~fins).astype(jnp.int32))}
+        return loss, metrics, grads, aux
+
+    rs = train_cfg.resilience
 
     def train_step(state, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
         with ctx, _flash_ctx(plan), moe_groups(n_groups):
-            loss, metrics, grads = grads_and_metrics(state["params"], batch)
+            batch = dict(batch)
+            chaos_scale = batch.pop("_chaos_grad_scale", None)
+            loss, metrics, grads, aux = grads_and_metrics(
+                state["params"], batch, chaos_scale)
+
+            # --- in-step anomaly signals (free: no extra device sync — they
+            # return with the metrics the loop already transfers) ------------
+            gnorm = adamw.global_norm(grads)
+            finite = aux["usable"] & jnp.isfinite(gnorm)
+            rstat = state.get("rstat")
+            if rstat is None:
+                rstat = init_rstat()
+            armed = rstat["n"] >= rs.warmup_steps
+            std = jnp.sqrt(jnp.maximum(rstat["var"], 1e-12))
+            z = (gnorm - rstat["ema"]) / std
+            z = jnp.where(finite, z, jnp.float32(jnp.inf))
+            spike = (armed & (z > rs.zscore_threshold)
+                     & (gnorm > rs.spike_factor * rstat["ema"]))
+            if rs.enabled:
+                skip = (~finite) | spike
+            else:
+                skip = jnp.zeros((), bool)
+
+            # EMA/variance track ACCEPTED steps only (a skipped spike must
+            # not drag the baseline toward the anomaly); the re-warm
+            # countdown set by the loop's rollback path decrements here
+            first = rstat["n"] == 0
+            d = jnp.float32(rs.ema_decay)
+            ema_new = jnp.where(first, gnorm,
+                                d * rstat["ema"] + (1 - d) * gnorm)
+            var_new = jnp.where(first, rstat["var"],
+                                d * rstat["var"]
+                                + (1 - d) * jnp.square(gnorm - rstat["ema"]))
+            accept = (~skip) & finite
+            new_rstat = {
+                "ema": jnp.where(accept, ema_new, rstat["ema"]),
+                "var": jnp.where(accept, var_new, rstat["var"]),
+                "n": rstat["n"] + accept.astype(jnp.int32),
+                "rewarm": jnp.maximum(rstat["rewarm"] - 1, 0),
+            }
+
             grads, ef = apply_compression(grads, train_cfg.compression, state.get("ef"))
             if mesh is not None and plan.zero_stage >= 2:
                 p_sh = zero.param_shardings(cfg, state["params"], mesh, plan)
@@ -185,12 +288,32 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
             lr = schedule.lr_schedule(state["step"], peak=train_cfg.peak_lr,
                                       warmup=train_cfg.warmup,
                                       total=train_cfg.total_steps)
+            lr = lr * schedule.rewarm_factor(rstat["rewarm"], rs.rewarm_steps)
             params, opt, om = adamw.adamw_update(grads, state["opt"], state["params"],
                                                  lr, train_cfg.adam)
-            new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+            if rs.enabled:
+                # skip → zero-update: keep params/opt (incl. Adam's step/bias
+                # correction) untouched; the data cursor still advances
+                keep = lambda new, old: jnp.where(skip, old, new)
+                params = jax.tree_util.tree_map(keep, params, state["params"])
+                opt = jax.tree_util.tree_map(keep, opt, state["opt"])
+            new_state = {"params": params, "opt": opt,
+                         "step": state["step"] + 1, "rstat": new_rstat}
             if ef is not None:
+                if rs.enabled:
+                    ef = jax.tree_util.tree_map(keep, ef, state["ef"])
                 new_state["ef"] = ef
             metrics = dict(metrics, loss=loss, **om)
+            # resilience signals win over om's post-compression grad_norm:
+            # the skip gate keyed on the pre-compression norm is the one the
+            # loop's policy must see
+            metrics.update(
+                grad_norm=gnorm,
+                all_finite=finite.astype(jnp.float32),
+                skipped=skip.astype(jnp.float32),
+                gnorm_z=jnp.where(armed & finite, z, 0.0),
+                nonfinite_micros=aux["nonfinite_micros"].astype(jnp.float32),
+                lr=lr)
         return new_state, metrics
 
     return train_step

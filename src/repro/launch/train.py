@@ -38,6 +38,9 @@ def main(argv=None):
                     choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a crash at this step (restart drill)")
+    ap.add_argument("--chaos-nan-at", type=int, action="append", default=None,
+                    help="inject NaN gradients at this data index "
+                         "(repeatable; exercises skip/rollback recovery)")
     args = ap.parse_args(argv)
 
     plan = ParallelismConfig(pp=args.pp, gas=max(args.gas, args.pp),
@@ -55,14 +58,24 @@ def main(argv=None):
     print(f"[train] {sess.cfg.name}: {sess.n_params/1e6:.1f}M params, "
           f"plan={sess.plan}")
 
+    chaos = None
+    if args.fail_at is not None or args.chaos_nan_at:
+        from repro.runtime.chaos import FaultPlan
+        chaos = FaultPlan(crash_at=args.fail_at,
+                          nan_grad_steps=tuple(args.chaos_nan_at or ()),
+                          gas=plan.gas)
+
     t0 = time.time()
     out = sess.run(args.steps, ckpt_dir=args.ckpt_dir,
                    ckpt_every=args.ckpt_every,
                    log_every=max(1, args.steps // 20),
-                   fail_at_step=args.fail_at)
+                   chaos=chaos)
     dt = time.time() - t0
     hist = out["history"]
     print(f"[train] done in {dt:.1f}s; loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f}")
+    if out["skipped_steps"] or out["rollbacks"]:
+        print(f"[train] resilience: {out['skipped_steps']} skipped, "
+              f"{out['rollbacks']} rollbacks, data cursor +{out['data_offset']}")
     return out
 
 

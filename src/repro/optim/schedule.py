@@ -12,3 +12,20 @@ def lr_schedule(step, *, peak: float = 3e-4, warmup: int = 200,
     t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
     cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
     return jnp.where(s < warmup, warm, cos)
+
+
+def rewarm_factor(steps_left, total: int):
+    """Post-rollback LR re-warm (the resilience layer's recovery hook).
+
+    After the loop rolls back to a good checkpoint it sets
+    ``state["rstat"]["rewarm"] = total``; the jitted step decrements it and
+    scales the scheduled LR by this factor — a linear ramp over ``total``
+    steps: with R steps remaining, scale = clip((total - R + 1)/total, 1/total,
+    1), i.e. 1/total on the first resumed step and 1.0 once the re-warm is
+    over.  ``total <= 0`` disables the ramp statically (returns python 1.0,
+    folding out of the trace entirely)."""
+    if total <= 0:
+        return 1.0
+    r = (steps_left.astype(jnp.float32) if hasattr(steps_left, "astype")
+         else jnp.asarray(steps_left, jnp.float32))
+    return jnp.clip((total - r + 1.0) / total, 1.0 / total, 1.0)

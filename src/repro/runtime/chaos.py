@@ -1,0 +1,161 @@
+"""Fault-injection harness for the training loop (replaces ``fail_at_step``).
+
+A ``FaultPlan`` declares *which* faults hit *when*; ``run_training`` (and
+``TrainSession.run(chaos=...)``) threads it through every recovery path so
+each fault class is exercised end-to-end, not just unit-mocked:
+
+* ``nan_grad_steps`` / ``spike_steps`` / ``nan_micro`` — poison the gradients
+  of specific **data indices** (not loop steps: after a rollback fast-forwards
+  the cursor past the window, the poison is genuinely gone, like a bad shard
+  that got skipped).  Injection works by attaching a per-micro-batch
+  ``_chaos_grad_scale`` vector to the batch; ``stepfn`` multiplies gradients
+  by it inside the jitted step, so the real detection/masking machinery sees
+  genuinely non-finite grads.
+* ``crash_at`` — raise mid-loop (the restart drill formerly spelled
+  ``fail_at_step``).
+* ``sigterm_at`` — deliver a real SIGTERM to this process (preemption drill).
+* ``slow_steps`` — stall inside the step window so the ``StepWatchdog``
+  deadline thread fires (``sleep`` is injectable for fake-clock tests).
+* ``ckpt_write_failures`` / ``ckpt_partial_leaf`` / ``ckpt_read_failures`` —
+  fail checkpoint I/O attempts (transiently, or mid-write leaving an orphaned
+  ``.tmp``) to exercise the retry policy and corrupt-fallback paths.
+
+Every injection is recorded in ``injected`` so tests and the resilience
+benchmark can assert exactly what fired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class ChaosError(RuntimeError):
+    """An injected fault (so tests can tell chaos from real failures)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    # gradient anomalies, keyed by DATA INDEX (step + data_offset)
+    nan_grad_steps: Tuple[int, ...] = ()
+    spike_steps: Tuple[int, ...] = ()
+    spike_scale: float = 1e4
+    nan_micro: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)          # data index -> micro-batch indices
+    gas: int = 1                       # width of the _chaos_grad_scale vector
+
+    # control-flow faults, keyed by LOOP STEP
+    crash_at: Optional[int] = None
+    sigterm_at: Optional[int] = None
+    slow_steps: Dict[int, float] = dataclasses.field(default_factory=dict)
+    sleep: Callable[[float], None] = time.sleep
+
+    # checkpoint I/O faults (consumed in order, one per attempt)
+    ckpt_write_failures: int = 0       # fail this many write attempts outright
+    ckpt_partial_leaf: Optional[int] = None  # die once, after N leaves written
+    ckpt_read_failures: int = 0        # fail this many restore read attempts
+
+    # record of everything that actually fired: (where, kind)
+    injected: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    # gradient poisoning (rides the batch into the jitted step)
+    # ------------------------------------------------------------------
+    def _poisons_grads(self) -> bool:
+        return bool(self.nan_grad_steps or self.spike_steps or self.nan_micro)
+
+    def grad_scale(self, data_index: int) -> Optional[np.ndarray]:
+        """Per-micro gradient scale for this data index (None = no injection
+        configured at all, so batches stay untouched)."""
+        if not self._poisons_grads():
+            return None
+        s = np.ones((max(1, self.gas),), np.float32)
+        if data_index in self.nan_grad_steps:
+            s[:] = np.nan
+            self.injected.append((data_index, "nan_grads"))
+        if data_index in self.spike_steps:
+            s[:] = self.spike_scale
+            self.injected.append((data_index, "grad_spike"))
+        for m in self.nan_micro.get(data_index, ()):
+            s[m] = np.nan
+            self.injected.append((data_index, f"nan_micro_{m}"))
+        return s
+
+    def wrap_batches(self, batches: Callable[[int], dict]) -> Callable[[int], dict]:
+        """Attach ``_chaos_grad_scale`` to every batch (shape-stable, so the
+        jitted step traces once); identity when no grad faults are planned."""
+        if not self._poisons_grads():
+            return batches
+
+        def wrapped(i: int) -> dict:
+            import jax.numpy as jnp
+            b = dict(batches(i))
+            b["_chaos_grad_scale"] = jnp.asarray(self.grad_scale(i))
+            return b
+
+        return wrapped
+
+    # ------------------------------------------------------------------
+    # control-flow faults
+    # ------------------------------------------------------------------
+    def maybe_crash(self, step: int) -> None:
+        if self.crash_at is not None and step == self.crash_at:
+            self.injected.append((step, "crash"))
+            raise RuntimeError(f"injected failure at step {step}")
+
+    def maybe_sigterm(self, step: int) -> None:
+        if self.sigterm_at is not None and step == self.sigterm_at:
+            self.injected.append((step, "sigterm"))
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    def maybe_slow(self, step: int) -> None:
+        d = self.slow_steps.get(step)
+        if d:
+            self.injected.append((step, "slow_step"))
+            self.sleep(d)
+
+    # ------------------------------------------------------------------
+    # checkpoint I/O faults (hooks for checkpoint.store)
+    # ------------------------------------------------------------------
+    def ckpt_write_hook(self) -> Optional[Callable[[int], None]]:
+        """Hook called before each leaf write: ``hook(i_leaf)`` may raise.
+        Returns None when no write faults are planned (zero overhead)."""
+        if self.ckpt_write_failures <= 0 and self.ckpt_partial_leaf is None:
+            return None
+
+        def hook(i_leaf: int) -> None:
+            if self.ckpt_partial_leaf is not None and i_leaf >= self.ckpt_partial_leaf:
+                self.ckpt_partial_leaf = None   # fire once
+                self.injected.append((i_leaf, "ckpt_partial_write"))
+                raise ChaosError("injected partial checkpoint write")
+            if i_leaf == 0 and self.ckpt_write_failures > 0:
+                self.ckpt_write_failures -= 1
+                self.injected.append((0, "ckpt_write_fail"))
+                raise ChaosError("injected checkpoint write failure")
+
+        return hook
+
+    def ckpt_read_hook(self) -> Optional[Callable[[], None]]:
+        """Hook called before each checkpoint read attempt; raises a transient
+        OSError while read failures remain."""
+        if self.ckpt_read_failures <= 0:
+            return None
+
+        def hook() -> None:
+            if self.ckpt_read_failures > 0:
+                self.ckpt_read_failures -= 1
+                self.injected.append((0, "ckpt_read_fail"))
+                raise OSError("injected transient checkpoint read failure")
+
+        return hook
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for _, kind in self.injected:
+            out[kind] = out.get(kind, 0) + 1
+        return out

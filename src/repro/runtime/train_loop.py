@@ -1,7 +1,12 @@
 """Fault-tolerant training loop: restore → train → periodic atomic checkpoint
-→ clean preemption handling.  The loop is deliberately free of any state that
-is not in the checkpoint, so kill -9 at any point loses at most
-``ckpt_every`` steps and a restart continues bit-exactly (tested).
+→ clean preemption handling, plus the host half of the resilience contract
+(``runtime.resilience``): a skip/rollback recovery state machine driven by the
+in-step anomaly signals, a running watchdog thread for hung/straggling steps,
+and checkpoint I/O whose failures are retried, surfaced, and tracked instead
+of silently lost.  The loop is deliberately free of any state that is not in
+the checkpoint (including the rolled-forward data cursor, stored in the
+manifest ``extra``), so kill -9 at any point loses at most ``ckpt_every``
+steps and a restart continues bit-exactly (tested).
 """
 
 from __future__ import annotations
@@ -9,16 +14,25 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
-from repro.checkpoint import restore_latest, save_checkpoint
+from repro.checkpoint import RetryPolicy, restore_latest, save_checkpoint
 from repro.checkpoint.elastic import canonicalize_state, reshard_state
 from repro.core.recipe import ParallelismConfig
+from repro.runtime.chaos import FaultPlan
+from repro.runtime.resilience import (ROLLBACK, SKIP, RecoveryPolicy,
+                                      ResilienceConfig, ResilienceEvent)
 from repro.runtime.watchdog import StepWatchdog
+
+
+def log_event(tracker, step, kind, payload):
+    """Thin indirection over ``session.tracker.log_event`` — imported lazily
+    because ``session`` imports this module (TrainSession wraps the loop)."""
+    from repro.session.tracker import log_event as _impl
+    _impl(tracker, step, kind, payload)
 
 
 @dataclasses.dataclass
@@ -40,25 +54,51 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
                  *, plan: ParallelismConfig = ParallelismConfig(),
                  log: Callable[[str], None] = print,
                  tracker=None,
-                 fail_at_step: Optional[int] = None) -> Dict[str, Any]:
-    """Run (or resume) training. ``batches(step)`` → batch dict.
+                 resilience: Optional[ResilienceConfig] = None,
+                 chaos: Optional[FaultPlan] = None,
+                 ckpt_retry: Optional[RetryPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic) -> Dict[str, Any]:
+    """Run (or resume) training. ``batches(i)`` → batch dict for data index i.
 
     ``tracker`` is any ``session.tracker.Tracker`` — every logged step's
-    metrics stream through it (and ``finish()`` runs on the way out, also on
-    preemption, so file-backed trackers keep what was logged).
-    ``fail_at_step`` injects a crash (tests the restart path).
-    Returns {state, metrics_history, resumed_from}.
+    metrics stream through it, every recovery transition lands as a
+    structured event (``log_event``), and ``finish()`` runs on the way out,
+    also on preemption, so file-backed trackers keep what was logged.
+    ``resilience`` configures the skip/rollback policy (it should match the
+    ``TrainConfig.resilience`` baked into the jitted step — ``TrainSession``
+    keeps them in sync); ``chaos`` is the fault-injection harness
+    (``runtime.chaos.FaultPlan``, replacing the old ``fail_at_step``);
+    ``ckpt_retry`` bounds checkpoint I/O retries.
+    Returns {state, history, resumed_from, stragglers, events, skipped_steps,
+    rollbacks, data_offset}.
     """
+    rs = resilience if resilience is not None else ResilienceConfig()
+    policy = RecoveryPolicy(rs)
+    retry = ckpt_retry if ckpt_retry is not None else RetryPolicy()
+    read_fault = chaos.ckpt_read_hook() if chaos is not None else None
+    write_fault = chaos.ckpt_write_hook() if chaos is not None else None
+    if chaos is not None:
+        batches = chaos.wrap_batches(batches)
+
+    def emit(step: int, kind: str, **detail):
+        policy.events.append(ResilienceEvent(step, kind, detail))
+        log_event(tracker, step, kind, detail)
+
     start_step = 0
+    data_offset = 0
     resumed_from = None
     if loop_cfg.ckpt_dir:
-        restored, extra, step = restore_latest(loop_cfg.ckpt_dir, canonicalize_state(state, plan))
+        restored, extra, step = restore_latest(
+            loop_cfg.ckpt_dir, canonicalize_state(state, plan),
+            retry=retry, log=log, fault_hook=read_fault)
         if restored is not None:
             state = reshard_state(restored, plan)
             state = jax.tree_util.tree_map(jax.numpy.asarray, state)
             start_step = int(extra.get("next_step", step))
+            data_offset = int(extra.get("data_offset", 0))
             resumed_from = start_step
-            log(f"[loop] resumed from checkpoint at step {start_step}")
+            log(f"[loop] resumed from checkpoint at step {start_step}"
+                + (f" (data cursor +{data_offset})" if data_offset else ""))
 
     preempt = {"flag": False}
 
@@ -69,19 +109,119 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
 
     stragglers = []
     wd = StepWatchdog(loop_cfg.step_deadline_s,
-                      on_timeout=lambda s, el: stragglers.append((s, el)))
+                      on_timeout=lambda s, el: stragglers.append((s, el)),
+                      clock=clock)
+    wd.start()
+    straggler_cursor = 0
     history = []
     pending_writer = None
+
+    def reap_writer(writer, *, block: bool, at_step: int):
+        """Check a background writer's fate; surface failures as events
+        instead of silently believing the checkpoint exists."""
+        if writer is None:
+            return None
+        if not block and not writer.done():
+            return writer
+        err = writer.exception()
+        if err is not None:
+            log(f"[loop] background checkpoint write for step {writer.step} "
+                f"FAILED after retries: {err}")
+            emit(at_step, "ckpt_write_failed",
+                 ckpt_step=writer.step, error=str(err))
+        return None
+
+    def write_ckpt(step: int, *, emergency: bool = False):
+        nonlocal pending_writer
+        pending_writer = reap_writer(pending_writer, block=True, at_step=step)
+        tag = loop_cfg.total_steps + 1_000_000 if emergency else step
+        extra = {"next_step": step, "data_offset": data_offset}
+        try:
+            writer = save_checkpoint(
+                loop_cfg.ckpt_dir, tag, canonicalize_state(state, plan),
+                extra=extra, keep=loop_cfg.keep_ckpts,
+                background=loop_cfg.async_ckpt and not emergency,
+                retry=retry, log=log, fault_hook=write_fault)
+        except Exception as e:               # noqa: BLE001 — surfaced
+            log(f"[loop] checkpoint write for step {step} FAILED after "
+                f"retries: {e}")
+            emit(step, "ckpt_write_failed", ckpt_step=tag, error=str(e))
+            return
+        pending_writer = writer
+
+    step = start_step
     try:
-        for step in range(start_step, loop_cfg.total_steps):
+        while step < loop_cfg.total_steps:
             if preempt["flag"]:
                 raise Preempted()
-            if fail_at_step is not None and step == fail_at_step:
-                raise RuntimeError(f"injected failure at step {step}")
+            if chaos is not None:
+                chaos.maybe_crash(step)
+                chaos.maybe_sigterm(step)
             wd.begin_step(step)
-            batch = batches(step)
+            batch = batches(step + data_offset)
             state, metrics = train_step(state, batch)
+            if chaos is not None:
+                chaos.maybe_slow(step)       # inside the watchdog window
             wd.end_step(step)
+            while straggler_cursor < len(stragglers):
+                s, el = stragglers[straggler_cursor]
+                straggler_cursor += 1
+                emit(s, "straggler", elapsed_s=float(el),
+                     deadline_s=loop_cfg.step_deadline_s)
+
+            # --- recovery policy: reads the in-step anomaly scalars that
+            # already ride the metrics transfer -----------------------------
+            action = policy.observe(step, metrics)
+            if action == SKIP:
+                log(f"[resilience] step {step}: anomalous update skipped "
+                    f"(grad_norm={policy.events[-1].detail['grad_norm']:.4g}, "
+                    f"{policy.consecutive_skips} consecutive)")
+                log_event(tracker, step, SKIP, policy.events[-1].detail)
+            elif action == ROLLBACK:
+                log_event(tracker, step, SKIP, policy.events[-1].detail)
+                t0 = clock()
+                restored = extra2 = None
+                if loop_cfg.ckpt_dir:
+                    pending_writer = reap_writer(pending_writer, block=True,
+                                                 at_step=step)
+                    restored, extra2, ck = restore_latest(
+                        loop_cfg.ckpt_dir, canonicalize_state(state, plan),
+                        retry=retry, log=log, fault_hook=read_fault)
+                if restored is not None:
+                    target = int(extra2.get("next_step", ck))
+                    jump = (step + 1 - target) + rs.skip_window_margin
+                    data_offset += jump
+                    state = reshard_state(restored, plan)
+                    if rs.rewarm_steps > 0 and "rstat" in state:
+                        state["rstat"] = dict(
+                            state["rstat"],
+                            rewarm=np.asarray(rs.rewarm_steps, np.int32))
+                    state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+                    detail = {"steps_lost": step + 1 - target,
+                              "data_skipped": jump,
+                              "rewarm_steps": rs.rewarm_steps,
+                              "latency_s": float(clock() - t0)}
+                    policy.on_rollback(step, target, **detail)
+                    emit_detail = dict(detail, restored_step=target)
+                    log_event(tracker, step, ROLLBACK, emit_detail)
+                    log(f"[resilience] step {step}: {rs.max_consecutive_skips}"
+                        f" consecutive skips — rolled back to step {target}, "
+                        f"data cursor +{jump}, LR re-warm "
+                        f"{rs.rewarm_steps} steps")
+                    step = target
+                    continue
+                # no checkpoint to roll back to: the skipped updates never
+                # touched params, so training continues on the next batch —
+                # but say so loudly
+                reason = ("no checkpoint directory" if not loop_cfg.ckpt_dir
+                          else "no restorable checkpoint")
+                policy.on_rollback(step, None, reason=reason)
+                log_event(tracker, step, "rollback_unavailable",
+                          {"reason": reason})
+                log(f"[resilience] step {step}: rollback wanted but no "
+                    f"checkpoint available — continuing (updates were "
+                    f"skipped, params are clean)")
+
             if step % loop_cfg.log_every == 0:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()}
                 history.append({"step": step, **m})
@@ -89,28 +229,31 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
                     tracker.log_metrics(step, m)
                 log(f"[loop] step {step}: " +
                     " ".join(f"{k}={v:.4g}" for k, v in m.items()))
-            if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
-                if pending_writer is not None:
-                    pending_writer.join()
-                pending_writer = save_checkpoint(
-                    loop_cfg.ckpt_dir, step + 1, canonicalize_state(state, plan),
-                    extra={"next_step": step + 1}, keep=loop_cfg.keep_ckpts,
-                    background=loop_cfg.async_ckpt)
+            # never checkpoint mid skip-streak: a rollback target must be a
+            # step the policy considered healthy
+            if (loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0
+                    and policy.healthy):
+                write_ckpt(step + 1)
+            step += 1
     except Preempted:
         if loop_cfg.ckpt_dir:
+            write_ckpt(step, emergency=True)
             if pending_writer is not None:
-                pending_writer.join()
-            save_checkpoint(loop_cfg.ckpt_dir, loop_cfg.total_steps + 1_000_000,
-                            canonicalize_state(state, plan),
-                            extra={"next_step": step}, keep=loop_cfg.keep_ckpts)
+                pending_writer = reap_writer(pending_writer, block=True,
+                                             at_step=step)
+            emit(step, "preempt", emergency_ckpt=True)
             log("[loop] preempted — emergency checkpoint written")
+        else:
+            emit(step, "preempt", emergency_ckpt=False)
         raise
     finally:
-        if pending_writer is not None:
-            pending_writer.join()
+        pending_writer = reap_writer(pending_writer, block=True, at_step=step)
+        wd.stop()
         signal.signal(signal.SIGTERM, old_handler)
         if tracker is not None:
             tracker.finish()
 
     return {"state": state, "history": history, "resumed_from": resumed_from,
-            "stragglers": stragglers}
+            "stragglers": stragglers, "events": policy.events,
+            "skipped_steps": policy.n_skipped, "rollbacks": policy.n_rollbacks,
+            "data_offset": data_offset}

@@ -28,6 +28,16 @@ class Tracker(Protocol):
         """Flush and release resources; the tracker may not be used after."""
 
 
+def log_event(tracker, step: int, kind: str, payload: Dict[str, object]) -> None:
+    """Emit a structured recovery/lifecycle event (skip, rollback, straggler,
+    ckpt_write_failed, preempt, ...) through ``tracker`` if it supports
+    events — minimal trackers that only implement the metrics protocol are
+    silently tolerated."""
+    fn = getattr(tracker, "log_event", None)
+    if tracker is not None and fn is not None:
+        fn(step, kind, payload)
+
+
 def _scalarize(metrics: Dict[str, object]) -> Dict[str, Scalar]:
     """Coerce jax/numpy 0-d leaves to plain python scalars (JSON-safe)."""
     out: Dict[str, Scalar] = {}
@@ -45,6 +55,9 @@ class NullTracker:
     def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
         pass
 
+    def log_event(self, step: int, kind: str, payload: Dict[str, object]) -> None:
+        pass
+
     def finish(self) -> None:
         pass
 
@@ -58,13 +71,18 @@ class JsonlTracker:
         self.path = Path(path)
         self._fh = None
 
-    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+    def _write(self, row: Dict[str, object]) -> None:
         if self._fh is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             self._fh = self.path.open("a")
-        self._fh.write(json.dumps({"step": int(step), **_scalarize(metrics)})
-                       + "\n")
+        self._fh.write(json.dumps(row) + "\n")
         self._fh.flush()
+
+    def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
+        self._write({"step": int(step), **_scalarize(metrics)})
+
+    def log_event(self, step: int, kind: str, payload: Dict[str, object]) -> None:
+        self._write({"event": kind, "step": int(step), **_scalarize(payload)})
 
     def finish(self) -> None:
         if self._fh is not None:
@@ -73,14 +91,20 @@ class JsonlTracker:
 
 
 class InMemoryTracker:
-    """Keeps rows in a list — handy for tests and ad-hoc analysis."""
+    """Keeps rows (and events) in lists — handy for tests and ad-hoc
+    analysis."""
 
     def __init__(self):
         self.rows = []
+        self.events = []
         self.finished = False
 
     def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
         self.rows.append({"step": int(step), **_scalarize(metrics)})
+
+    def log_event(self, step: int, kind: str, payload: Dict[str, object]) -> None:
+        self.events.append({"event": kind, "step": int(step),
+                            **_scalarize(payload)})
 
     def finish(self) -> None:
         self.finished = True
@@ -95,6 +119,10 @@ class CompositeTracker:
     def log_metrics(self, step: int, metrics: Dict[str, Scalar]) -> None:
         for t in self.trackers:
             t.log_metrics(step, metrics)
+
+    def log_event(self, step: int, kind: str, payload: Dict[str, object]) -> None:
+        for t in self.trackers:
+            log_event(t, step, kind, payload)
 
     def finish(self) -> None:
         for t in self.trackers:

@@ -148,12 +148,18 @@ class TrainSession:
             ckpt_dir=None, ckpt_every: int = 50,
             log_every: Optional[int] = None, keep_ckpts: int = 3,
             async_ckpt: bool = True, fail_at_step: Optional[int] = None,
+            chaos=None, ckpt_retry=None,
             tracker=None, log=print) -> Dict[str, Any]:
         """Fault-tolerant training to ``steps`` (default: the schedule length):
-        restore → train → periodic atomic checkpoint → preemption handling.
+        restore → train → periodic atomic checkpoint → preemption handling,
+        with the resilience policy from ``train_cfg.resilience`` (the same
+        config the jitted step's skip gate was built with, so the two halves
+        of the contract stay in sync).
 
         ``tracker`` is any ``session.tracker.Tracker`` (e.g. ``JsonlTracker``);
-        every logged step's metrics stream through it."""
+        every logged step's metrics stream through it.  ``chaos`` is a
+        ``runtime.chaos.FaultPlan``; ``fail_at_step`` is the deprecated
+        spelling of ``FaultPlan(crash_at=...)`` and is folded into it."""
         if self.abstract:
             raise RuntimeError("abstract sessions cannot run; use .lower()")
         if self._next_step:
@@ -161,6 +167,10 @@ class TrainSession:
                 "run() restarts the data schedule at step 0 — don't mix manual "
                 "step() with run() in one session; use a fresh session (resume "
                 "happens via ckpt_dir) or keep stepping manually")
+        if fail_at_step is not None:
+            from repro.runtime.chaos import FaultPlan
+            chaos = chaos if chaos is not None else FaultPlan()
+            chaos.crash_at = fail_at_step
         total = steps if steps is not None else self.train_cfg.total_steps
         loop_cfg = LoopConfig(
             total_steps=total, ckpt_every=ckpt_every,
@@ -169,7 +179,8 @@ class TrainSession:
             keep_ckpts=keep_ckpts, async_ckpt=async_ckpt)
         out = run_training(self.state, self.train_step, self.batches, loop_cfg,
                            plan=self.plan, log=log, tracker=tracker,
-                           fail_at_step=fail_at_step)
+                           resilience=self.train_cfg.resilience,
+                           chaos=chaos, ckpt_retry=ckpt_retry)
         self.state = out["state"]
         self._next_step = total
         return out

@@ -15,6 +15,7 @@ from repro.checkpoint import (restore_latest, restore_step, save_checkpoint,
 from repro.checkpoint.elastic import canonicalize_state, reshard_state
 from repro.core import stepfn
 from repro.core.recipe import ParallelismConfig
+from repro.runtime.chaos import FaultPlan
 from repro.runtime.train_loop import LoopConfig, run_training
 
 
@@ -73,11 +74,12 @@ def _train(arch, steps, ckpt_dir, fail_at=None, seed=0):
         return {"tokens": jax.random.randint(k, (2, 16), 0, cfg.vocab_size),
                 "labels": jax.random.randint(k, (2, 16), 0, cfg.vocab_size)}
 
+    chaos = FaultPlan(crash_at=fail_at) if fail_at is not None else None
     return run_training(state, step_fn, batches,
                         LoopConfig(total_steps=steps, ckpt_every=4,
                                    ckpt_dir=str(ckpt_dir), log_every=100,
                                    async_ckpt=False),
-                        plan=plan, fail_at_step=fail_at)
+                        plan=plan, chaos=chaos)
 
 
 def test_crash_restart_bit_exact(tmp_path):

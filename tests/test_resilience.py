@@ -1,0 +1,396 @@
+"""Resilience layer: in-step anomaly detection (skip gate, GAS micro-batch
+masking), the loop's skip/rollback recovery state machine, LR re-warm,
+watchdog wiring, and checkpoint I/O failure surfacing — every fault injected
+end-to-end through ``runtime.chaos.FaultPlan``, nothing mocked."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_mod
+from repro.checkpoint import (RetryPolicy, list_steps, restore_latest,
+                              save_checkpoint)
+from repro.core import stepfn
+from repro.core.recipe import ParallelismConfig
+from repro.optim import schedule
+from repro.runtime.chaos import ChaosError, FaultPlan
+from repro.runtime.resilience import (OK, ROLLBACK, SKIP, RecoveryPolicy,
+                                      ResilienceConfig)
+from repro.runtime.train_loop import LoopConfig, Preempted, run_training
+from repro.session.tracker import InMemoryTracker
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _setup(steps, rs=None, gas=1, seed=0):
+    cfg = cfg_mod.get_config("granite_3_2b").reduced()
+    plan = ParallelismConfig(gas=gas)
+    tcfg = stepfn.TrainConfig(
+        peak_lr=1e-3, total_steps=steps, warmup=2,
+        resilience=rs if rs is not None else ResilienceConfig())
+    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(seed), tcfg)
+    step_fn = jax.jit(stepfn.make_train_step(cfg, plan, tcfg))
+    return cfg, plan, state, step_fn
+
+
+def _batches(cfg, batch=2, seq=16):
+    def fn(step):
+        k = jax.random.PRNGKey(1000 + step)
+        return {"tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size),
+                "labels": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)}
+    return fn
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a["params"]),
+                               jax.tree_util.tree_leaves(b["params"])))
+
+
+# ---------------------------------------------------------------------------
+# in-step anomaly detection (device side)
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_step_skipped_zero_update():
+    cfg, plan, state, step_fn = _setup(8)
+    batch = dict(_batches(cfg)(0), _chaos_grad_scale=jnp.full((1,), jnp.nan))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["skipped"]) == 1.0
+    assert float(m["all_finite"]) == 0.0
+    assert _params_equal(before, state2), "skipped step must not touch params"
+    # rstat must not absorb the anomalous norm either
+    assert float(state2["rstat"]["n"]) == 0
+
+
+def test_clean_step_reports_signals_and_updates():
+    cfg, plan, state, step_fn = _setup(8)
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, _batches(cfg)(0))
+    assert float(m["skipped"]) == 0.0
+    assert float(m["all_finite"]) == 1.0
+    assert np.isfinite(float(m["grad_norm"])) and float(m["grad_norm"]) > 0
+    assert not _params_equal(before, state2)
+    assert float(state2["rstat"]["n"]) == 1
+
+
+def test_gas_single_bad_micro_masked_not_skipped():
+    rs = ResilienceConfig()
+    cfg, plan, state, step_fn = _setup(8, rs, gas=4)
+    scale = np.ones((4,), np.float32)
+    scale[2] = np.nan
+    batch = dict(_batches(cfg, batch=4)(0), _chaos_grad_scale=jnp.asarray(scale))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["nonfinite_micros"]) == 1.0
+    assert float(m["skipped"]) == 0.0, "one bad micro must not kill the step"
+    assert float(m["all_finite"]) == 1.0, "masked accumulation stays finite"
+    assert np.isfinite(float(m["loss"]))
+    assert not _params_equal(before, state2), "surviving micros still update"
+
+
+def test_gas_all_micros_bad_skips():
+    cfg, plan, state, step_fn = _setup(8, gas=4)
+    batch = dict(_batches(cfg, batch=4)(0),
+                 _chaos_grad_scale=jnp.full((4,), jnp.nan))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["nonfinite_micros"]) == 4.0
+    assert float(m["skipped"]) == 1.0
+    assert _params_equal(before, state2)
+
+
+def test_spike_gate_skips_after_warmup():
+    rs = ResilienceConfig(warmup_steps=3, zscore_threshold=4.0, spike_factor=3.0)
+    cfg, plan, state, step_fn = _setup(16, rs)
+    batches = _batches(cfg)
+    for i in range(5):                      # establish the accepted-norm EMA
+        state, m = step_fn(state, batches(i))
+        assert float(m["skipped"]) == 0.0
+    spike = dict(batches(5), _chaos_grad_scale=jnp.full((1,), 1e4))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state, m = step_fn(state, spike)
+    assert float(m["skipped"]) == 1.0, "100x norm must trip the z-gate"
+    assert float(m["all_finite"]) == 1.0, "spike is finite — z-gate, not NaN"
+    assert float(m["gnorm_z"]) > rs.zscore_threshold
+    assert _params_equal(before, state)
+
+
+def test_resilience_disabled_lets_nan_through():
+    cfg, plan, state, step_fn = _setup(8, ResilienceConfig(enabled=False))
+    batch = dict(_batches(cfg)(0), _chaos_grad_scale=jnp.full((1,), jnp.nan))
+    state2, m = step_fn(state, batch)
+    assert float(m["skipped"]) == 0.0
+    assert float(m["all_finite"]) == 0.0, "signals still reported when disabled"
+    leaves = jax.tree_util.tree_leaves(state2["params"])
+    assert any(not np.all(np.isfinite(np.asarray(x))) for x in leaves), \
+        "with the gate off, NaN grads must actually poison params"
+
+
+def test_rewarm_factor_schedule():
+    assert schedule.rewarm_factor(0, 4) == 1.0
+    np.testing.assert_allclose(float(schedule.rewarm_factor(4, 4)), 0.25)
+    np.testing.assert_allclose(float(schedule.rewarm_factor(1, 4)), 1.0)
+    assert schedule.rewarm_factor(0, 0) == 1.0   # rewarm disabled
+
+
+def test_rewarm_scales_lr_in_step():
+    cfg, plan, state, step_fn = _setup(8)
+    _, m0 = step_fn(jax.tree_util.tree_map(jnp.asarray, state),
+                    _batches(cfg)(0))
+    state["rstat"] = dict(state["rstat"], rewarm=jnp.int32(10))
+    _, m1 = step_fn(state, _batches(cfg)(0))
+    np.testing.assert_allclose(float(m1["lr"]), float(m0["lr"]) * 0.1,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# recovery policy (host side, unit)
+# ---------------------------------------------------------------------------
+
+def test_recovery_policy_state_machine():
+    pol = RecoveryPolicy(ResilienceConfig(max_consecutive_skips=3))
+    ok = {"skipped": 0.0, "grad_norm": 1.0}
+    bad = {"skipped": 1.0, "grad_norm": float("nan"), "all_finite": 0.0}
+    assert pol.observe(0, ok) == OK and pol.healthy
+    assert pol.observe(1, bad) == SKIP and not pol.healthy
+    assert pol.observe(2, ok) == OK, "streak resets on a good step"
+    assert pol.healthy
+    assert pol.observe(3, bad) == SKIP
+    assert pol.observe(4, bad) == SKIP
+    assert pol.observe(5, bad) == ROLLBACK
+    pol.on_rollback(5, 4, steps_lost=2)
+    assert pol.healthy and pol.n_rollbacks == 1 and pol.n_skipped == 4
+    kinds = [e.kind for e in pol.events]
+    assert kinds.count("skip") == 4 and kinds.count("rollback") == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end recovery through the loop
+# ---------------------------------------------------------------------------
+
+def test_rollback_e2e_bit_exact(tmp_path):
+    """NaN grads at data 6-8 → skip, skip, rollback to ckpt@4, fast-forward
+    the cursor past the window; final params bit-exact with a clean run that
+    never saw those batches."""
+    steps = 16
+    rs = ResilienceConfig(max_consecutive_skips=3, rewarm_steps=0,
+                          warmup_steps=1000)   # isolate the NaN path
+    cfg, plan, state, step_fn = _setup(steps, rs)
+    batches = _batches(cfg)
+    tr = InMemoryTracker()
+    out = run_training(
+        state, step_fn, batches,
+        LoopConfig(total_steps=steps, ckpt_every=4, ckpt_dir=str(tmp_path),
+                   log_every=100, async_ckpt=False),
+        plan=plan, resilience=rs, tracker=tr, log=lambda s: None,
+        chaos=FaultPlan(nan_grad_steps=(6, 7, 8)))
+
+    assert out["skipped_steps"] == 3 and out["rollbacks"] == 1
+    assert out["data_offset"] == 5
+    rb = next(e for e in out["events"] if e.kind == "rollback")
+    assert rb.detail["restored_step"] == 4
+    assert rb.detail["steps_lost"] == 5      # steps 4..8 redone
+    assert rb.detail["data_skipped"] == 5    # data 4..8 never consumed again
+    assert [e["event"] for e in tr.events] == ["skip", "skip", "skip",
+                                               "rollback"]
+
+    # clean reference: same schedule, data jumps 0,1,2,3 → 9,10,...
+    cfg2, plan2, state2, step_fn2 = _setup(steps, rs)
+    ref = run_training(
+        state2, step_fn2,
+        lambda i: batches(i if i < 4 else i + 5),
+        LoopConfig(total_steps=steps, ckpt_every=1000, log_every=100),
+        plan=plan2, resilience=rs, log=lambda s: None)
+    assert _params_equal(out["state"], ref["state"]), \
+        "recovered run must be bit-exact with a run that skipped the window"
+
+
+def test_rollback_unavailable_degrades_to_continue():
+    steps = 12
+    rs = ResilienceConfig(max_consecutive_skips=2, warmup_steps=1000)
+    cfg, plan, state, step_fn = _setup(steps, rs)
+    out = run_training(
+        state, step_fn, _batches(cfg),
+        LoopConfig(total_steps=steps, log_every=100),    # no ckpt_dir
+        plan=plan, resilience=rs, log=lambda s: None,
+        chaos=FaultPlan(nan_grad_steps=(3, 4)))
+    kinds = [e.kind for e in out["events"]]
+    assert "rollback_unavailable" in kinds
+    assert out["rollbacks"] == 0
+    # training completed: the skipped updates never touched params
+    leaves = jax.tree_util.tree_leaves(out["state"]["params"])
+    assert all(np.all(np.isfinite(np.asarray(x))) for x in leaves)
+
+
+def test_crash_restart_replays_data_offset(tmp_path):
+    """Rollback moves the data cursor; a crash AFTER the rollback must restore
+    the moved cursor from the checkpoint, not restart the schedule."""
+    steps = 16
+    rs = ResilienceConfig(max_consecutive_skips=3, rewarm_steps=0,
+                          warmup_steps=1000)
+
+    def go(chaos):
+        cfg, plan, state, step_fn = _setup(steps, rs)
+        return run_training(
+            state, step_fn, _batches(cfg),
+            LoopConfig(total_steps=steps, ckpt_every=4, ckpt_dir=str(tmp_path),
+                       log_every=100, async_ckpt=False),
+            plan=plan, resilience=rs, log=lambda s: None, chaos=chaos)
+
+    with pytest.raises(RuntimeError, match="injected"):
+        go(FaultPlan(nan_grad_steps=(6, 7, 8), crash_at=13))
+    resumed = go(None)
+    assert resumed["resumed_from"] == 12
+    assert resumed["data_offset"] == 5, \
+        "data cursor must survive crash-restart via the checkpoint manifest"
+
+
+def test_sigterm_preempts_with_emergency_ckpt(tmp_path):
+    steps = 12
+    cfg, plan, state, step_fn = _setup(steps)
+    with pytest.raises(Preempted):
+        run_training(state, step_fn, _batches(cfg),
+                     LoopConfig(total_steps=steps, ckpt_every=100,
+                                ckpt_dir=str(tmp_path), log_every=100,
+                                async_ckpt=False),
+                     plan=plan, log=lambda s: None,
+                     chaos=FaultPlan(sigterm_at=5))
+    cfg2, plan2, state2, step_fn2 = _setup(steps)
+    out = run_training(state2, step_fn2, _batches(cfg2),
+                       LoopConfig(total_steps=steps, ckpt_every=100,
+                                  ckpt_dir=str(tmp_path), log_every=100),
+                       plan=plan2, log=lambda s: None)
+    assert out["resumed_from"] == 6, "emergency ckpt resumes past the sigterm"
+
+
+# ---------------------------------------------------------------------------
+# watchdog wiring (satellite: loop never started it before)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_fires_in_loop_on_slow_step():
+    steps = 6
+    fake = {"t": 0.0}
+
+    def clock():
+        return fake["t"]
+
+    def slow_sleep(d):
+        fake["t"] += d           # the step stalls in fake time...
+        time.sleep(0.4)          # ...long enough (real) for the poll to see it
+
+    cfg, plan, state, step_fn = _setup(steps)
+    tr = InMemoryTracker()
+    out = run_training(state, step_fn, _batches(cfg),
+                       LoopConfig(total_steps=steps, log_every=100,
+                                  step_deadline_s=5.0),
+                       plan=plan, log=lambda s: None, tracker=tr, clock=clock,
+                       chaos=FaultPlan(slow_steps={3: 60.0}, sleep=slow_sleep))
+    assert [s for s, _ in out["stragglers"]] == [3]
+    ev = [e for e in out["events"] if e.kind == "straggler"]
+    assert len(ev) == 1 and ev[0].step == 3
+    assert ev[0].detail["elapsed_s"] >= 5.0
+    assert any(e["event"] == "straggler" for e in tr.events)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint I/O failure surfacing
+# ---------------------------------------------------------------------------
+
+def _mini_state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "opt": {"m": {"w": jnp.zeros((3, 4))}},
+            "step": jnp.int32(0)}
+
+
+def test_background_writer_surfaces_exception(tmp_path):
+    st = _mini_state()
+    plan = FaultPlan(ckpt_write_failures=5)
+    retry = RetryPolicy(attempts=2, sleep=lambda s: None)
+    w = save_checkpoint(tmp_path, 1, st, background=True, retry=retry,
+                        fault_hook=plan.ckpt_write_hook())
+    assert isinstance(w.exception(), ChaosError), \
+        "writer thread failure must be held, not lost"
+    with pytest.raises(ChaosError):
+        w.join()
+    assert list_steps(tmp_path) == []
+
+
+def test_retry_absorbs_transient_write_failures(tmp_path):
+    st = _mini_state()
+    plan = FaultPlan(ckpt_write_failures=2)
+    logs = []
+    retry = RetryPolicy(attempts=4, sleep=lambda s: None)
+    w = save_checkpoint(tmp_path, 1, st, background=True, retry=retry,
+                        log=logs.append, fault_hook=plan.ckpt_write_hook())
+    w.join()                                 # no raise: third attempt wrote
+    assert list_steps(tmp_path) == [1]
+    assert sum("failed" in s for s in logs) == 2
+
+
+def test_loop_surfaces_background_write_failure(tmp_path):
+    steps = 10
+    cfg, plan, state, step_fn = _setup(steps)
+    out = run_training(
+        state, step_fn, _batches(cfg),
+        LoopConfig(total_steps=steps, ckpt_every=4, ckpt_dir=str(tmp_path),
+                   log_every=100, async_ckpt=True),
+        plan=plan, log=lambda s: None,
+        ckpt_retry=RetryPolicy(attempts=1, sleep=lambda s: None),
+        chaos=FaultPlan(ckpt_write_failures=99))
+    failed = [e for e in out["events"] if e.kind == "ckpt_write_failed"]
+    assert failed, "a lost background write must become a structured event"
+    assert "injected" in failed[0].detail["error"]
+    assert list_steps(tmp_path) == []
+
+
+def test_crash_mid_write_falls_back_and_gc(tmp_path):
+    """Writer dies after N leaves of step_8: restore falls back to step_4,
+    and the orphaned ``.tmp`` is GC'd by the next successful save."""
+    st = _mini_state()
+    save_checkpoint(tmp_path, 4, st)
+    plan = FaultPlan(ckpt_partial_leaf=1)
+    with pytest.raises(ChaosError):
+        save_checkpoint(tmp_path, 8, st,
+                        retry=RetryPolicy(attempts=1, sleep=lambda s: None),
+                        fault_hook=plan.ckpt_write_hook())
+    orphans = list(tmp_path.glob("step_*.tmp"))
+    assert len(orphans) == 1, "partial write leaves a .tmp behind"
+    logs = []
+    got, extra, step = restore_latest(tmp_path, st, log=logs.append)
+    assert step == 4, "restore must fall back to the last complete step"
+    save_checkpoint(tmp_path, 12, st)
+    assert list(tmp_path.glob("step_*.tmp")) == [], \
+        "next save garbage-collects the orphan"
+    assert sorted(list_steps(tmp_path)) == [4, 12]
+
+
+def test_restore_retry_absorbs_transient_read_failure(tmp_path):
+    st = _mini_state()
+    save_checkpoint(tmp_path, 3, st)
+    plan = FaultPlan(ckpt_read_failures=1)
+    logs = []
+    got, extra, step = restore_latest(
+        tmp_path, st, retry=RetryPolicy(attempts=3, sleep=lambda s: None),
+        log=logs.append, fault_hook=plan.ckpt_read_hook())
+    assert step == 3, "one transient read fault must not lose the checkpoint"
+    assert any("failed" in s for s in logs)
+
+
+def test_restore_latest_reports_through_injected_log(tmp_path):
+    st = _mini_state()
+    save_checkpoint(tmp_path, 1, st)
+    save_checkpoint(tmp_path, 2, st)
+    victim = next(p for p in sorted((tmp_path / "step_00000002").iterdir())
+                  if p.suffix == ".npy")
+    victim.write_bytes(b"corrupted!")
+    logs = []
+    got, extra, step = restore_latest(tmp_path, st, log=logs.append)
+    assert step == 1
+    assert any("unusable" in s for s in logs), \
+        "fallback must be reported through the injected log, not stdout"
