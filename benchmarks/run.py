@@ -387,6 +387,7 @@ def resilience_bench():
     import jax
     from repro.checkpoint import RetryPolicy
     from repro.core import stepfn
+    from repro.core.recipe import ParallelismConfig
     from repro.data import DataConfig
     from repro.runtime.chaos import FaultPlan
     from repro.runtime.resilience import ResilienceConfig
@@ -488,6 +489,47 @@ def resilience_bench():
         rows.append(("resilience/ckpt_retry", 0.0,
                      f"2 transient write faults absorbed, "
                      f"gave_up={len(failed_events)}"))
+
+    # --- consensus skip: one divergent replica masked, fleet vote agrees ----
+    R = 2
+    rs = ResilienceConfig(consensus_replicas=R)
+    sess = TrainSession.from_recipe(
+        "granite_3_2b", reduced=True, plan=ParallelismConfig(dp=R),
+        train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=2, total_steps=8,
+                                     resilience=rs),
+        data_cfg=DataConfig(seq_len=128, global_batch=8))
+    out = sess.run(8, log_every=100,
+                   chaos=FaultPlan(replica_nan={4: (1,)}, replicas=R))
+    bench["scenarios"]["consensus_skip"] = {
+        "replicas": R, "injected_divergent_replicas": 1,
+        "steps_skipped": out["skipped_steps"],
+        "verdict": "masked" if not out["skipped_steps"] else "skipped"}
+    rows.append(("resilience/consensus_skip", 0.0,
+                 f"1 divergent replica of {R} -> masked, "
+                 f"{out['skipped_steps']} steps skipped fleet-wide"))
+
+    # --- elastic re-plan: replica loss -> shrink dp, restore, resume --------
+    from repro.runtime.fleet import FleetController
+    with tempfile.TemporaryDirectory() as d:
+        sess = TrainSession.from_recipe(
+            "granite_3_2b", reduced=True, plan=ParallelismConfig(dp=2),
+            train_cfg=stepfn.TrainConfig(peak_lr=1e-3, warmup=2,
+                                         total_steps=12,
+                                         resilience=ResilienceConfig()),
+            data_cfg=DataConfig(seq_len=128, global_batch=8))
+        out = sess.run(12, ckpt_dir=d, ckpt_every=4, log_every=100,
+                       async_ckpt=False, chaos=FaultPlan(lose_replica={7: 1}),
+                       fleet=FleetController(2))
+        rp = next(e for e in out["events"] if e.kind == "replan")
+        bench["scenarios"]["replica_loss_replan"] = {
+            "lost_replica_at_step": 7, "replans": out["replans"],
+            "new_dp": out["plan"].dp,
+            "steps_lost": rp.detail["steps_lost"],
+            "recovery_latency_s": round(rp.detail["latency_s"], 4)}
+        rows.append(("resilience/replica_loss_replan",
+                     rp.detail["latency_s"] * 1e6,
+                     f"dp 2->{out['plan'].dp}, "
+                     f"steps_lost={rp.detail['steps_lost']}"))
 
     out_path = Path(__file__).resolve().parent.parent / "BENCH_resilience.json"
     out_path.write_text(json.dumps(bench, indent=1) + "\n")

@@ -34,6 +34,14 @@ def canonicalize_state(state: Dict[str, Any], plan: ParallelismConfig) -> Dict[s
     return out
 
 
+def replan_state(state: Dict[str, Any], old_plan: ParallelismConfig,
+                 new_plan: ParallelismConfig) -> Dict[str, Any]:
+    """Convert a live train state between plans in one hop (the elastic
+    re-plan path: canonicalize out of the old layout, re-stack into the
+    new).  A no-op tree-wise when both plans share the pipeline layout."""
+    return reshard_state(canonicalize_state(state, old_plan), new_plan)
+
+
 def reshard_state(state: Dict[str, Any], new_plan: ParallelismConfig) -> Dict[str, Any]:
     """Canonical state → layout for ``new_plan`` (inverse of canonicalize)."""
     if new_plan.pp <= 1:

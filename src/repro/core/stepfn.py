@@ -35,6 +35,17 @@ class TrainConfig:
         default_factory=ResilienceConfig)
 
 
+def _micro_bits(bad) -> jax.Array:
+    """(n,) bool mask → float bitmask (exact in fp32 for n ≤ 24) — the
+    anomaly-forensics breadcrumb: the loop decodes which micro-batches of a
+    skipped step went bad without shipping a vector through the metrics."""
+    n = bad.shape[0]
+    if n > 24:
+        return jnp.float32(0.0)
+    return jnp.sum(bad.astype(jnp.float32)
+                   * (2.0 ** jnp.arange(n, dtype=jnp.float32)))
+
+
 def init_rstat() -> Dict[str, jax.Array]:
     """Resilience stats carried in the train state (so they checkpoint,
     reshard, and roll back with everything else): EMA/variance of accepted
@@ -121,8 +132,20 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
         return model_api.loss_fn(cfg, params, batch, remat_policy=plan.remat_policy)
 
     n_groups = plan.dp * plan.pods if mesh is not None else 1
+    rs = train_cfg.resilience
 
-    def grads_and_metrics(params, batch, chaos_scale=None):
+    # --- skip consensus: how many data-parallel replica groups vote -------
+    # ``consensus_replicas`` forces a simulated fleet on any device count
+    # (tests, chaos drills); otherwise the replica axis is the real dp·pods
+    # extent of the mesh.  The voted path needs per-replica gradient
+    # contributions, which the pipeline schedule folds away — pp>1 keeps the
+    # single global verdict (identical on every replica under GSPMD anyway).
+    n_rep = 1
+    if rs.enabled and rs.consensus and plan.pp == 1:
+        n_rep = rs.consensus_replicas or (plan.dp * plan.pods
+                                          if mesh is not None else 1)
+
+    def grads_and_metrics(params, batch, chaos_scale=None, rstat=None):
         """(loss, metrics, grads, anomaly-aux), honoring ``plan.gas`` on the
         pp=1 path.
 
@@ -139,7 +162,13 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
         micro weights renormalized over the survivors) instead of poisoning
         the whole step; ``usable`` goes False only when every micro-batch is
         bad.  ``chaos_scale`` is the fault-injection harness' per-micro
-        gradient multiplier (``runtime.chaos.FaultPlan``)."""
+        gradient multiplier (``runtime.chaos.FaultPlan``).
+
+        With ``n_rep > 1`` the consensus path takes over: per-replica
+        verdicts voted across the dp axis (``rstat`` supplies the shared
+        z-gate baseline)."""
+        if n_rep > 1:
+            return consensus_grads(params, batch, chaos_scale, rstat)
         if plan.pp > 1 or plan.gas <= 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
@@ -149,7 +178,9 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
                     lambda g: (g * s).astype(g.dtype), grads)
             usable = jnp.isfinite(adamw.global_norm(grads))
             aux = {"usable": usable,
-                   "nonfinite_micros": (~usable).astype(jnp.int32)}
+                   "nonfinite_micros": (~usable).astype(jnp.int32),
+                   "bad_replicas": jnp.zeros((), jnp.int32),
+                   "bad_micro_bits": (~usable).astype(jnp.float32)}
             return loss, metrics, grads, aux
         gas = plan.gas
 
@@ -231,26 +262,157 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
         usable = jnp.any(fins)
         loss = jnp.where(usable, loss, jnp.float32(jnp.nan))
         aux = {"usable": usable,
-               "nonfinite_micros": jnp.sum((~fins).astype(jnp.int32))}
+               "nonfinite_micros": jnp.sum((~fins).astype(jnp.int32)),
+               "bad_replicas": jnp.zeros((), jnp.int32),
+               "bad_micro_bits": _micro_bits(~fins)}
         return loss, metrics, grads, aux
 
-    rs = train_cfg.resilience
+    def consensus_grads(params, batch, chaos_scale, rstat):
+        """Fleet-voted anomaly verdict (the tentpole of the elastic-recovery
+        contract): batch rows are split into the ``n_rep`` data-parallel
+        replica shards, each replica accumulates its OWN gradient
+        contribution (per-micro finite masking inside, exactly like the GAS
+        path), and its local verdict — every micro non-finite, a non-finite
+        local norm, or a z/spike outlier against the shared ``rstat``
+        baseline — is reduced across the replica axis.  Under GSPMD that
+        reduction lowers to the cross-dp collective (the psum the fleet
+        needs), so every replica computes the identical voted bit and the
+        zero-update decision cannot desync the fleet's collectives.
+
+        A *minority* of bad replicas is masked out of the accumulation with
+        survivor-renormalized weights (a divergent replica costs its shard
+        of the batch, not the step); the full skip is taken only when the
+        vote says no replica survived — or unconditionally on any bad
+        replica when ``mask_divergent_replicas`` is off.
+
+        The replica axis is ``vmap``-ed, not scanned: with the batch sharded
+        over dp, each replica's gradient stack stays resident on its own
+        devices (the local-grads-before-psum layout of a real fleet) and the
+        masked ``sum(axis=0)`` at the end is the one cross-replica
+        collective.  ``overlap_zero``'s per-micro constraint does not
+        compose with the vmap — the step-level ZeRO constraint after
+        compression still applies."""
+        R, gas = n_rep, max(plan.gas, 1)
+
+        def to_micro(x):
+            if x.shape[0] % (R * gas):
+                raise ValueError(
+                    f"batch dim {x.shape[0]} not divisible by "
+                    f"replicas*gas={R}*{gas}")
+            return x.reshape(R, gas, x.shape[0] // (R * gas), *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(to_micro, batch)
+        acc_dt = cfg.compute_dtype
+
+        # token weights per (replica, micro), normalized to mean 1 over all
+        # R·gas micros — same semantics as the GAS path, so uniform masks
+        # keep the all-clean denominator at exactly R·gas
+        if batch.get("loss_mask") is not None:
+            w = jnp.sum(batch["loss_mask"].astype(jnp.float32)
+                        .reshape(R, gas, -1), axis=-1)
+        else:
+            w = jnp.full((R, gas),
+                         batch["labels"].reshape(R * gas, -1).shape[1],
+                         jnp.float32)
+        wn = w * (R * gas / jnp.maximum(jnp.sum(w), 1.0))
+
+        if chaos_scale is not None:
+            s = chaos_scale.astype(jnp.float32).reshape(-1)
+            if s.size == R * gas:
+                scale = s.reshape(R, gas)
+            elif s.size == gas:
+                scale = jnp.broadcast_to(s[None, :], (R, gas))
+            else:
+                scale = jnp.broadcast_to(jnp.prod(s), (R, gas))
+        else:
+            scale = jnp.ones((R, gas), jnp.float32)
+
+        armed = rstat["n"] >= rs.warmup_steps
+        std = jnp.sqrt(jnp.maximum(rstat["var"], 1e-12))
+
+        def per_replica(mb_r, wn_r, s_r):
+            def one_micro(gr, inp2):
+                mb, wi, si = inp2
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g = jax.tree_util.tree_map(
+                    lambda x: (x * si).astype(x.dtype), g)
+                fin = jnp.isfinite(adamw.global_norm(g))
+                gr = jax.tree_util.tree_map(
+                    lambda a, gi: a + jnp.where(fin, (gi * wi).astype(a.dtype),
+                                                jnp.zeros((), a.dtype)),
+                    gr, g)
+                return gr, (l, met, fin)
+
+            gr0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            g_r, (ls, mets, fins) = jax.lax.scan(
+                one_micro, gr0, (mb_r, wn_r, s_r))
+
+            # local verdict: the norm of this replica's per-micro-average
+            # gradient is what this replica would vote on from its own shard
+            live_w = jnp.sum(wn_r * fins.astype(jnp.float32))
+            norm_r = adamw.global_norm(g_r) / jnp.maximum(live_w, 1e-6)
+            z_r = (norm_r - rstat["ema"]) / std
+            spike_r = (armed & (z_r > rs.zscore_threshold)
+                       & (norm_r > rs.spike_factor * rstat["ema"]))
+            bad = (~jnp.any(fins)) | (~jnp.isfinite(norm_r)) | spike_r
+
+            # mask a bad replica's contribution BEFORE the cross-replica
+            # reduce so its poison never enters the collective
+            good = ~bad
+            g_r = jax.tree_util.tree_map(
+                lambda x: jnp.where(good, x, jnp.zeros((), x.dtype)), g_r)
+            wloss = jnp.sum(jnp.where(fins, ls * wn_r, 0.0))
+            wmets = jax.tree_util.tree_map(
+                lambda x: jnp.sum(jnp.where(fins, x * wn_r.astype(x.dtype),
+                                            jnp.zeros((), x.dtype)), axis=0),
+                mets)
+            return g_r, wloss, wmets, fins, bad, live_w
+
+        g_all, wlosses, wmets, fins, bad_r, live_ws = jax.vmap(per_replica)(
+            micro, wn, scale)
+
+        good_r = ~bad_r
+        n_bad = jnp.sum(bad_r.astype(jnp.int32))      # ← the fleet vote
+        all_clean = jnp.all(fins) & (n_bad == 0)
+        live_w = jnp.sum(jnp.where(good_r, live_ws, 0.0))
+        denom = jnp.where(all_clean, jnp.float32(R * gas),
+                          jnp.maximum(live_w, 1e-6))
+        # the reduce over the replica axis: under GSPMD this IS the psum
+        # over the dp mesh axis — the collective the consensus rides
+        grads = jax.tree_util.tree_map(
+            lambda g: (jnp.sum(g, axis=0) / denom).astype(g.dtype), g_all)
+        metrics = jax.tree_util.tree_map(
+            lambda x: jnp.sum(jnp.where(good_r, x, jnp.zeros((), x.dtype)),
+                              axis=0) / denom.astype(x.dtype), wmets)
+        loss = jnp.sum(jnp.where(good_r, wlosses, 0.0)) / denom
+        usable = live_w > 0
+        loss = jnp.where(usable, loss, jnp.float32(jnp.nan))
+        aux = {"usable": usable,
+               "nonfinite_micros": jnp.sum((~fins).astype(jnp.int32)),
+               "bad_replicas": n_bad,
+               "bad_micro_bits": _micro_bits(jnp.any(~fins, axis=0))}
+        return loss, metrics, grads, aux
 
     def train_step(state, batch):
         ctx = shd.axis_rules(mesh, mapping) if mesh is not None else _null_ctx()
         with ctx, _flash_ctx(plan), moe_groups(n_groups):
             batch = dict(batch)
             chaos_scale = batch.pop("_chaos_grad_scale", None)
-            loss, metrics, grads, aux = grads_and_metrics(
-                state["params"], batch, chaos_scale)
-
-            # --- in-step anomaly signals (free: no extra device sync — they
-            # return with the metrics the loop already transfers) ------------
-            gnorm = adamw.global_norm(grads)
-            finite = aux["usable"] & jnp.isfinite(gnorm)
             rstat = state.get("rstat")
             if rstat is None:
                 rstat = init_rstat()
+            loss, metrics, grads, aux = grads_and_metrics(
+                state["params"], batch, chaos_scale, rstat)
+
+            # --- in-step anomaly signals (free: no extra device sync — they
+            # return with the metrics the loop already transfers).  On the
+            # consensus path every input below is already a fleet-reduced
+            # value, so the verdict — and the zero-update it gates — is
+            # bit-identical on every replica. ------------------------------
+            gnorm = adamw.global_norm(grads)
+            finite = aux["usable"] & jnp.isfinite(gnorm)
             armed = rstat["n"] >= rs.warmup_steps
             std = jnp.sqrt(jnp.maximum(rstat["var"], 1e-12))
             z = (gnorm - rstat["ema"]) / std
@@ -259,6 +421,9 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
                      & (gnorm > rs.spike_factor * rstat["ema"]))
             if rs.enabled:
                 skip = (~finite) | spike
+                if n_rep > 1 and not rs.mask_divergent_replicas:
+                    # strict mode: one bad replica vetoes the whole step
+                    skip = skip | (aux["bad_replicas"] > 0)
             else:
                 skip = jnp.zeros((), bool)
 
@@ -313,6 +478,9 @@ def make_train_step(cfg: ModelConfig, plan: ParallelismConfig,
                 skipped=skip.astype(jnp.float32),
                 gnorm_z=jnp.where(armed & finite, z, 0.0),
                 nonfinite_micros=aux["nonfinite_micros"].astype(jnp.float32),
+                bad_replicas=aux["bad_replicas"].astype(jnp.float32),
+                n_replicas=jnp.float32(n_rep),
+                bad_micro_bits=aux["bad_micro_bits"],
                 lr=lr)
         return new_state, metrics
 

@@ -61,6 +61,21 @@ def pack_segments(rows: np.ndarray, eos_id: int) -> Dict[str, np.ndarray]:
     }
 
 
+def batch_fingerprint(batch: Dict[str, np.ndarray]) -> str:
+    """Content hash of a batch's token/label arrays (forensics: a skip event
+    logs this next to the data index, so a bad shard can be identified by
+    content even after the file moved or the cursor was fast-forwarded past
+    it).  Keys are hashed in sorted order; non-data keys (chaos scales,
+    modality embeds) are excluded so the hash is stable across harnesses."""
+    h = hashlib.sha1()
+    for k in ("tokens", "labels"):
+        v = batch.get(k)
+        if v is not None:
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
+    return h.hexdigest()[:16]
+
+
 def estimate_mean_doc_len(tokens: np.ndarray, eos_id: int) -> float:
     """Mean EOS-delimited document length over a token sample (B, S): total
     tokens over document count, where each row contributes its EOS count

@@ -36,19 +36,38 @@ def main(argv=None):
     ap.add_argument("--zero", type=int, default=1)
     ap.add_argument("--compression", default="none",
                     choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a crash at this step (restart drill)")
     ap.add_argument("--chaos-nan-at", type=int, action="append", default=None,
                     help="inject NaN gradients at this data index "
                          "(repeatable; exercises skip/rollback recovery)")
+    ap.add_argument("--fleet-replicas", type=int, default=0,
+                    help="track N replicas in a FleetController (enables "
+                         "elastic re-plan on replica loss / stragglers)")
+    ap.add_argument("--chaos-lose-replica", action="append", default=None,
+                    metavar="STEP:REPLICA",
+                    help="inject replica loss at a loop step (repeatable; "
+                         "exercises the elastic re-plan path)")
+    ap.add_argument("--chaos-replica-nan", action="append", default=None,
+                    metavar="INDEX:REPLICA",
+                    help="poison ONE replica's gradients at a data index "
+                         "(repeatable; exercises the skip-consensus vote)")
     args = ap.parse_args(argv)
 
     plan = ParallelismConfig(pp=args.pp, gas=max(args.gas, args.pp),
-                             zero_stage=args.zero)
+                             zero_stage=args.zero, dp=args.dp)
     tcfg = stepfn.TrainConfig(
         peak_lr=args.lr, total_steps=args.steps,
         warmup=max(1, args.steps // 10),
         compression=None if args.compression == "none" else args.compression)
+    if args.fleet_replicas > 0:
+        # simulated fleet on one host: force that many consensus replica
+        # groups so the skip vote is exercised without a multi-device mesh
+        from repro.runtime.resilience import ResilienceConfig
+        import dataclasses as _dc
+        tcfg = _dc.replace(tcfg, resilience=ResilienceConfig(
+            consensus_replicas=args.fleet_replicas))
 
     sess = TrainSession.from_recipe(
         args.arch, reduced=args.reduced, plan=plan, train_cfg=tcfg,
@@ -58,24 +77,42 @@ def main(argv=None):
     print(f"[train] {sess.cfg.name}: {sess.n_params/1e6:.1f}M params, "
           f"plan={sess.plan}")
 
+    def parse_pairs(items):
+        return {int(a): int(b) for a, b in
+                (s.split(":", 1) for s in (items or ()))}
+
     chaos = None
-    if args.fail_at is not None or args.chaos_nan_at:
+    if (args.fail_at is not None or args.chaos_nan_at
+            or args.chaos_lose_replica or args.chaos_replica_nan):
         from repro.runtime.chaos import FaultPlan
-        chaos = FaultPlan(crash_at=args.fail_at,
-                          nan_grad_steps=tuple(args.chaos_nan_at or ()),
-                          gas=plan.gas)
+        chaos = FaultPlan(
+            crash_at=args.fail_at,
+            nan_grad_steps=tuple(args.chaos_nan_at or ()),
+            gas=plan.gas,
+            replicas=max(1, args.fleet_replicas, plan.dp),
+            lose_replica=parse_pairs(args.chaos_lose_replica),
+            replica_nan={i: (r,) for i, r in
+                         parse_pairs(args.chaos_replica_nan).items()})
+
+    fleet = None
+    if args.fleet_replicas > 0:
+        from repro.runtime.fleet import FleetController
+        fleet = FleetController(args.fleet_replicas)
 
     t0 = time.time()
     out = sess.run(args.steps, ckpt_dir=args.ckpt_dir,
                    ckpt_every=args.ckpt_every,
                    log_every=max(1, args.steps // 20),
-                   chaos=chaos)
+                   chaos=chaos, fleet=fleet)
     dt = time.time() - t0
     hist = out["history"]
     print(f"[train] done in {dt:.1f}s; loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f}")
     if out["skipped_steps"] or out["rollbacks"]:
         print(f"[train] resilience: {out['skipped_steps']} skipped, "
               f"{out['rollbacks']} rollbacks, data cursor +{out['data_offset']}")
+    if out.get("replans"):
+        print(f"[train] fleet: {out['replans']} re-plan(s), final plan "
+              f"dp={out['plan'].dp} pp={out['plan'].pp}")
     return out
 
 

@@ -19,6 +19,12 @@ each fault class is exercised end-to-end, not just unit-mocked:
 * ``ckpt_write_failures`` / ``ckpt_partial_leaf`` / ``ckpt_read_failures`` —
   fail checkpoint I/O attempts (transiently, or mid-write leaving an orphaned
   ``.tmp``) to exercise the retry policy and corrupt-fallback paths.
+* ``replica_nan`` / ``replica_spike`` — poison ONE replica's gradients (data
+  index keyed, ``replicas`` rows in the scale matrix): the skip-consensus
+  vote must mask exactly that replica, fleet-wide and bit-identically.
+* ``lose_replica`` / ``straggle_replica`` — node loss and persistent
+  stragglers (loop-step keyed), feeding the ``FleetController`` liveness
+  tracker so the elastic ``replan()`` path is exercised end-to-end.
 
 Every injection is recorded in ``injected`` so tests and the resilience
 benchmark can assert exactly what fired.
@@ -49,6 +55,22 @@ class FaultPlan:
         default_factory=dict)          # data index -> micro-batch indices
     gas: int = 1                       # width of the _chaos_grad_scale vector
 
+    # fleet faults: per-REPLICA gradient divergence (data-index keyed — the
+    # consensus vote must mask exactly the injected replica), replica loss
+    # and persistent stragglers (loop-step keyed — they drive the
+    # ``FleetController`` re-plan state machine)
+    replicas: int = 1                  # replica rows of the chaos scale matrix
+    replica_nan: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)          # data index -> replica ids (NaN grads)
+    replica_spike: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)          # data index -> replica ids (finite
+    #                                    divergence at ``spike_scale``)
+    lose_replica: Dict[int, int] = dataclasses.field(
+        default_factory=dict)          # loop step -> replica id lost
+    straggle_replica: Dict[int, Tuple[int, float]] = dataclasses.field(
+        default_factory=dict)          # replica id -> (from loop step,
+    #                                    slowdown factor on its heartbeats)
+
     # control-flow faults, keyed by LOOP STEP
     crash_at: Optional[int] = None
     sigterm_at: Optional[int] = None
@@ -67,14 +89,18 @@ class FaultPlan:
     # gradient poisoning (rides the batch into the jitted step)
     # ------------------------------------------------------------------
     def _poisons_grads(self) -> bool:
-        return bool(self.nan_grad_steps or self.spike_steps or self.nan_micro)
+        return bool(self.nan_grad_steps or self.spike_steps or self.nan_micro
+                    or self.replica_nan or self.replica_spike)
 
     def grad_scale(self, data_index: int) -> Optional[np.ndarray]:
         """Per-micro gradient scale for this data index (None = no injection
-        configured at all, so batches stay untouched)."""
+        configured at all, so batches stay untouched).  With ``replicas > 1``
+        the vector is the flattened (replicas, gas) matrix the consensus
+        path consumes — replica faults poison one row."""
         if not self._poisons_grads():
             return None
-        s = np.ones((max(1, self.gas),), np.float32)
+        R, G = max(1, self.replicas), max(1, self.gas)
+        s = np.ones((R, G), np.float32)
         if data_index in self.nan_grad_steps:
             s[:] = np.nan
             self.injected.append((data_index, "nan_grads"))
@@ -82,9 +108,15 @@ class FaultPlan:
             s[:] = self.spike_scale
             self.injected.append((data_index, "grad_spike"))
         for m in self.nan_micro.get(data_index, ()):
-            s[m] = np.nan
+            s[:, m] = np.nan
             self.injected.append((data_index, f"nan_micro_{m}"))
-        return s
+        for r in self.replica_nan.get(data_index, ()):
+            s[r, :] = np.nan
+            self.injected.append((data_index, f"replica_nan_{r}"))
+        for r in self.replica_spike.get(data_index, ()):
+            s[r, :] = self.spike_scale
+            self.injected.append((data_index, f"replica_spike_{r}"))
+        return s.reshape(-1)
 
     def wrap_batches(self, batches: Callable[[int], dict]) -> Callable[[int], dict]:
         """Attach ``_chaos_grad_scale`` to every batch (shape-stable, so the
@@ -118,6 +150,28 @@ class FaultPlan:
         if d:
             self.injected.append((step, "slow_step"))
             self.sleep(d)
+
+    # ------------------------------------------------------------------
+    # fleet faults (consumed by the loop's FleetController wiring)
+    # ------------------------------------------------------------------
+    def maybe_lose_replica(self, step: int) -> Optional[int]:
+        """Replica lost at this loop step (the node-loss drill): returns the
+        replica id once, None otherwise."""
+        r = self.lose_replica.get(step)
+        if r is not None:
+            del self.lose_replica[step]      # fire once
+            self.injected.append((step, "replica_lost"))
+        return r
+
+    def peer_step_time(self, replica: int, step: int, local_s: float) -> float:
+        """Simulated peer heartbeat: replica ``replica``'s reported step time,
+        derived from the local one.  A persistent-straggler fault multiplies
+        it by the configured slowdown from its start step on."""
+        fault = self.straggle_replica.get(replica)
+        if fault is not None and step >= fault[0]:
+            self.injected.append((step, f"straggle_replica_{replica}"))
+            return local_s * fault[1]
+        return local_s
 
     # ------------------------------------------------------------------
     # checkpoint I/O faults (hooks for checkpoint.store)

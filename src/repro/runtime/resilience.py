@@ -39,6 +39,10 @@ import numpy as np
 OK = "ok"
 SKIP = "skip"
 ROLLBACK = "rollback"
+# event kind for a skip whose verdict was VOTED across dp replicas (the
+# consensus path) — the policy treats it exactly like SKIP, trackers see the
+# distinct kind so fleet-wide agreement is auditable post-hoc
+CONSENSUS_SKIP = "consensus_skip"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +66,24 @@ class ResilienceConfig:
     spike_factor: float = 10.0
     ema_decay: float = 0.99
     warmup_steps: int = 20          # accepted steps before the z-gate arms
+    # --- cross-replica skip consensus (device side, fleet) ---------------
+    # On a dp>1 mesh a verdict reached on one replica but not another desyncs
+    # every collective that follows: consensus computes a LOCAL verdict per
+    # data-parallel replica (from that replica's own batch shard) and reduces
+    # it across the replica axis inside the jitted step — under GSPMD the
+    # reduction lowers to the cross-dp collective, so every replica sees the
+    # identical voted bit and the zero-update is taken (or not) fleet-wide,
+    # bit-identically.  A *minority* of bad replicas is masked out of the
+    # gradient accumulation (survivor-renormalized, like GAS micro masking)
+    # instead of skipping the step; the full skip fires only when the vote
+    # says the step is unsalvageable.  dp=1 (and consensus off) keeps the
+    # PR-8 single-verdict path bit-for-bit.
+    consensus: bool = True
+    consensus_replicas: int = 0     # 0 → infer dp·pods from the mesh; >0
+    #                                 forces that many simulated replica
+    #                                 groups (single-device fleet tests)
+    mask_divergent_replicas: bool = True   # minority bad → mask + continue;
+    #                                        False → any bad replica skips
     # --- loop recovery policy (host side) --------------------------------
     max_consecutive_skips: int = 3  # K skips → rollback to last good ckpt
     rewarm_steps: int = 10          # linear LR re-warm after a rollback
@@ -73,8 +95,11 @@ class ResilienceEvent:
     """One structured recovery-path transition (also mirrored to trackers)."""
 
     step: int
-    kind: str                       # skip | rollback | rollback_unavailable |
-    #                                 straggler | ckpt_write_failed | preempt
+    kind: str                       # skip | consensus_skip | rollback |
+    #                                 rollback_unavailable | straggler |
+    #                                 replica_lost | replan |
+    #                                 replan_unavailable | ckpt_write_failed |
+    #                                 preempt
     detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -116,12 +141,19 @@ class RecoveryPolicy:
             return OK
         self.consecutive_skips += 1
         self.n_skipped += 1
-        self.events.append(ResilienceEvent(step, SKIP, {
-            "grad_norm": _scalar(metrics, "grad_norm", float("nan")),
-            "all_finite": _scalar(metrics, "all_finite", 1.0),
-            "gnorm_z": _scalar(metrics, "gnorm_z"),
-            "consecutive": self.consecutive_skips,
-        }))
+        # a verdict voted across >1 replicas is logged under its own kind so
+        # the fleet-wide agreement is auditable; the state machine is blind
+        # to the difference (the voted bit already IS the agreed decision)
+        voted = _scalar(metrics, "n_replicas", 1.0) > 1.0
+        self.events.append(ResilienceEvent(
+            step, CONSENSUS_SKIP if voted else SKIP, {
+                "grad_norm": _scalar(metrics, "grad_norm", float("nan")),
+                "all_finite": _scalar(metrics, "all_finite", 1.0),
+                "gnorm_z": _scalar(metrics, "gnorm_z"),
+                "bad_replicas": _scalar(metrics, "bad_replicas"),
+                "n_replicas": _scalar(metrics, "n_replicas", 1.0),
+                "consecutive": self.consecutive_skips,
+            }))
         if self.consecutive_skips >= self.cfg.max_consecutive_skips:
             return ROLLBACK
         return SKIP

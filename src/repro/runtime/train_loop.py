@@ -20,9 +20,11 @@ import jax
 import numpy as np
 
 from repro.checkpoint import RetryPolicy, restore_latest, save_checkpoint
-from repro.checkpoint.elastic import canonicalize_state, reshard_state
+from repro.checkpoint.elastic import (canonicalize_state, replan_state,
+                                      reshard_state)
 from repro.core.recipe import ParallelismConfig
 from repro.runtime.chaos import FaultPlan
+from repro.runtime.fleet import FleetController
 from repro.runtime.resilience import (ROLLBACK, SKIP, RecoveryPolicy,
                                       ResilienceConfig, ResilienceEvent)
 from repro.runtime.watchdog import StepWatchdog
@@ -44,6 +46,10 @@ class LoopConfig:
     step_deadline_s: float = 3600.0
     keep_ckpts: int = 3
     async_ckpt: bool = True
+    straggler_factor: float = 4.0   # measured last/median step-time ratio
+    #                                 above which a structured ``straggler``
+    #                                 event is emitted (watchdog deadline
+    #                                 events fire independently of this)
 
 
 class Preempted(Exception):
@@ -56,6 +62,9 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
                  tracker=None,
                  resilience: Optional[ResilienceConfig] = None,
                  chaos: Optional[FaultPlan] = None,
+                 fleet: Optional[FleetController] = None,
+                 make_step: Optional[
+                     Callable[[ParallelismConfig], Callable]] = None,
                  ckpt_retry: Optional[RetryPolicy] = None,
                  clock: Callable[[], float] = time.monotonic) -> Dict[str, Any]:
     """Run (or resume) training. ``batches(i)`` → batch dict for data index i.
@@ -69,8 +78,20 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
     keeps them in sync); ``chaos`` is the fault-injection harness
     (``runtime.chaos.FaultPlan``, replacing the old ``fail_at_step``);
     ``ckpt_retry`` bounds checkpoint I/O retries.
+
+    ``fleet`` is a ``runtime.fleet.FleetController``: the loop feeds it one
+    heartbeat per replica per step (local step time from the watchdog;
+    simulated peers through ``chaos.peer_step_time``) and consults
+    ``fleet.observe`` after every step — a replica-lost or persistent-
+    straggler decision triggers the elastic **re-plan** arm: block-join the
+    checkpoint writer, shrink the plan (``fleet.shrink_plan``), restore the
+    last good checkpoint under the new plan (or re-plan the live state when
+    no checkpoint exists — the skipped/clean params are still good), rebuild
+    the jitted step via ``make_step(new_plan)``, fast-forward the data
+    cursor, resume.  ``make_step`` is required for a re-plan to complete;
+    without it the decision is surfaced as ``replan_unavailable``.
     Returns {state, history, resumed_from, stragglers, events, skipped_steps,
-    rollbacks, data_offset}.
+    rollbacks, replans, plan, data_offset}.
     """
     rs = resilience if resilience is not None else ResilienceConfig()
     policy = RecoveryPolicy(rs)
@@ -115,6 +136,23 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
     straggler_cursor = 0
     history = []
     pending_writer = None
+    n_replans = 0
+
+    def forensics(detail: Dict[str, Any], batch, metrics, step: int) -> None:
+        """Anomaly data forensics: stamp the offending batch's identity onto
+        a skip event so a bad shard can be traced back to the data, not just
+        the step — which data index, its content hash, and which micro-
+        batches inside it went non-finite (decoded from the in-step
+        ``bad_micro_bits`` bitmask)."""
+        detail["data_index"] = step + data_offset
+        try:
+            from repro.data.pipeline import batch_fingerprint
+            detail["batch_hash"] = batch_fingerprint(batch)
+        except Exception:                    # noqa: BLE001 — best-effort
+            pass
+        bits = int(float(np.asarray(metrics.get("bad_micro_bits", 0.0))))
+        if bits:
+            detail["bad_micros"] = [i for i in range(32) if (bits >> i) & 1]
 
     def reap_writer(writer, *, block: bool, at_step: int):
         """Check a background writer's fate; surface failures as events
@@ -167,18 +205,113 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
                 s, el = stragglers[straggler_cursor]
                 straggler_cursor += 1
                 emit(s, "straggler", elapsed_s=float(el),
-                     deadline_s=loop_cfg.step_deadline_s)
+                     deadline_s=loop_cfg.step_deadline_s, source="deadline")
+            # measured straggling (no deadline needed): last completed step
+            # vs the median — the quantitative signal the deadline thread
+            # can't give
+            sf = wd.slowdown_factor()
+            if sf is not None and sf > loop_cfg.straggler_factor:
+                emit(step, "straggler", source="measured",
+                     elapsed_s=float(wd.last_step_time() or 0.0),
+                     median_s=float(wd.median_step_time() or 0.0),
+                     slowdown=float(sf))
+
+            # --- fleet liveness: heartbeats in, re-plan decisions out ------
+            if fleet is not None:
+                t_local = float(wd.last_step_time() or 0.0)
+                for r in range(fleet.n_replicas):
+                    if not fleet.alive(r):
+                        continue
+                    t_r = t_local
+                    if chaos is not None and r != fleet.local_replica:
+                        t_r = chaos.peer_step_time(r, step, t_local)
+                    fleet.heartbeat(r, step, t_r)
+                if chaos is not None:
+                    lost = chaos.maybe_lose_replica(step)
+                    if lost is not None:
+                        fleet.mark_lost(lost, step, reason="chaos")
+                        emit(step, "replica_lost", replica=lost,
+                             reason="chaos")
+                decision = fleet.observe(step)
+                if decision is not None:
+                    if decision.kind == "straggler":
+                        emit(step, "straggler", source="fleet",
+                             replica=decision.replica, **decision.detail)
+                    elif decision.detail.get("reason") == "missed_heartbeats":
+                        emit(step, "replica_lost", replica=decision.replica,
+                             **decision.detail)
+                    # ---- elastic re-plan ------------------------------
+                    t0 = clock()
+                    new_plan = None
+                    try:
+                        new_plan = fleet.shrink_plan(plan)
+                    except ValueError as e:
+                        emit(step, "replan_unavailable", reason=str(e),
+                             trigger=decision.kind)
+                    if new_plan is not None and make_step is None:
+                        emit(step, "replan_unavailable", trigger=decision.kind,
+                             reason="no step factory (make_step=None)")
+                        log(f"[fleet] step {step}: re-plan wanted "
+                            f"({decision.kind}, replica {decision.replica}) "
+                            f"but no make_step factory — continuing degraded")
+                        new_plan = None
+                    if new_plan is not None:
+                        pending_writer = reap_writer(pending_writer,
+                                                     block=True, at_step=step)
+                        restored = extra2 = None
+                        if loop_cfg.ckpt_dir:
+                            restored, extra2, ck = restore_latest(
+                                loop_cfg.ckpt_dir,
+                                canonicalize_state(state, plan),
+                                retry=retry, log=log, fault_hook=read_fault)
+                        if restored is not None:
+                            target = int(extra2.get("next_step", ck))
+                            data_offset = int(
+                                extra2.get("data_offset", data_offset))
+                            state = reshard_state(restored, new_plan)
+                        else:
+                            # no checkpoint: the live params are clean
+                            # (anomalies never landed), so re-plan the live
+                            # state in place — zero steps lost
+                            target = step + 1
+                            state = replan_state(state, plan, new_plan)
+                        state = jax.tree_util.tree_map(
+                            jax.numpy.asarray, state)
+                        train_step = make_step(new_plan)
+                        detail = {
+                            "trigger": decision.kind,
+                            "replica": decision.replica,
+                            "old_plan": str(plan), "new_plan": str(new_plan),
+                            "restored_step": (target if restored is not None
+                                              else None),
+                            "steps_lost": step + 1 - target,
+                            "latency_s": float(clock() - t0)}
+                        emit(step, "replan", **detail)
+                        log(f"[fleet] step {step}: {decision.kind} (replica "
+                            f"{decision.replica}) — re-planned "
+                            f"{detail['old_plan']} -> {detail['new_plan']}, "
+                            f"resuming at step {target} "
+                            f"({detail['steps_lost']} steps lost)")
+                        n_replans += 1
+                        plan = new_plan
+                        fleet.on_replanned(step)
+                        step = target
+                        continue
 
             # --- recovery policy: reads the in-step anomaly scalars that
             # already ride the metrics transfer -----------------------------
             action = policy.observe(step, metrics)
             if action == SKIP:
+                forensics(policy.events[-1].detail, batch, metrics, step)
                 log(f"[resilience] step {step}: anomalous update skipped "
                     f"(grad_norm={policy.events[-1].detail['grad_norm']:.4g}, "
                     f"{policy.consecutive_skips} consecutive)")
-                log_event(tracker, step, SKIP, policy.events[-1].detail)
+                log_event(tracker, step, policy.events[-1].kind,
+                          policy.events[-1].detail)
             elif action == ROLLBACK:
-                log_event(tracker, step, SKIP, policy.events[-1].detail)
+                forensics(policy.events[-1].detail, batch, metrics, step)
+                log_event(tracker, step, policy.events[-1].kind,
+                          policy.events[-1].detail)
                 t0 = clock()
                 restored = extra2 = None
                 if loop_cfg.ckpt_dir:
@@ -256,4 +389,4 @@ def run_training(state, train_step: Callable, batches, loop_cfg: LoopConfig,
     return {"state": state, "history": history, "resumed_from": resumed_from,
             "stragglers": stragglers, "events": policy.events,
             "skipped_steps": policy.n_skipped, "rollbacks": policy.n_rollbacks,
-            "data_offset": data_offset}
+            "replans": n_replans, "plan": plan, "data_offset": data_offset}

@@ -62,6 +62,21 @@ class StepWatchdog:
         s = sorted(self.step_times)
         return s[len(s) // 2]
 
+    def last_step_time(self) -> Optional[float]:
+        """Duration of the most recently completed step (None before any)."""
+        return self.step_times[-1] if self.step_times else None
+
+    def slowdown_factor(self) -> Optional[float]:
+        """How much slower the last completed step ran than the median —
+        the measured straggler signal the loop emits as a structured event
+        and feeds the fleet's heartbeats (None until a positive median
+        exists, so zero-duration fake-clock steps never divide by zero)."""
+        med = self.median_step_time()
+        last = self.last_step_time()
+        if med is None or last is None or med <= 0:
+            return None
+        return last / med
+
     def is_straggling(self, factor: float = 2.0) -> bool:
         """Current step exceeding ``factor`` × median step time?"""
         med = self.median_step_time()

@@ -18,6 +18,25 @@ import numpy as np
 
 Scalar = Union[int, float]
 
+# The structured recovery/lifecycle event kinds the loop emits (the closed
+# vocabulary dashboards and tests key on — ``runtime.train_loop`` and
+# ``runtime.resilience`` are the only writers):
+#   skip                 anomalous update zero'd (single-replica verdict)
+#   consensus_skip       same, but the verdict was VOTED across dp replicas
+#   rollback             K consecutive skips → restored last good checkpoint
+#   rollback_unavailable rollback wanted, no checkpoint to restore
+#   straggler            slow step: source=deadline|measured|fleet
+#   replica_lost         a data-parallel replica left the fleet
+#   replan               elastic re-plan completed (old/new plan, steps_lost)
+#   replan_unavailable   re-plan wanted but impossible (no plan slack / no
+#                        step factory)
+#   ckpt_write_failed    checkpoint write failed after retries
+#   preempt              SIGTERM received, emergency checkpoint attempted
+RECOVERY_EVENT_KINDS = (
+    "skip", "consensus_skip", "rollback", "rollback_unavailable",
+    "straggler", "replica_lost", "replan", "replan_unavailable",
+    "ckpt_write_failed", "preempt")
+
 
 @runtime_checkable
 class Tracker(Protocol):
@@ -39,10 +58,12 @@ def log_event(tracker, step: int, kind: str, payload: Dict[str, object]) -> None
 
 
 def _scalarize(metrics: Dict[str, object]) -> Dict[str, Scalar]:
-    """Coerce jax/numpy 0-d leaves to plain python scalars (JSON-safe)."""
+    """Coerce jax/numpy 0-d leaves to plain python scalars (JSON-safe);
+    short lists of scalars (e.g. a forensics event's ``bad_micros``) pass
+    through as-is."""
     out: Dict[str, Scalar] = {}
     for k, v in metrics.items():
-        if isinstance(v, (int, float, str, bool)) or v is None:
+        if isinstance(v, (int, float, str, bool, list)) or v is None:
             out[k] = v
         else:
             out[k] = float(np.asarray(v))

@@ -75,6 +75,7 @@ class TrainSession:
                     stepfn.state_shardings(cfg, self.state, mesh, self.plan))
             step = stepfn.make_train_step(cfg, self.plan, self.train_cfg, mesh)
             self.train_step = jax.jit(step, donate_argnums=(0,) if donate else ())
+        self._donate = donate
 
         self._dataset = None
         self._batch_cache: Dict[int, Any] = {}
@@ -148,7 +149,7 @@ class TrainSession:
             ckpt_dir=None, ckpt_every: int = 50,
             log_every: Optional[int] = None, keep_ckpts: int = 3,
             async_ckpt: bool = True, fail_at_step: Optional[int] = None,
-            chaos=None, ckpt_retry=None,
+            chaos=None, fleet=None, ckpt_retry=None,
             tracker=None, log=print) -> Dict[str, Any]:
         """Fault-tolerant training to ``steps`` (default: the schedule length):
         restore → train → periodic atomic checkpoint → preemption handling,
@@ -159,7 +160,14 @@ class TrainSession:
         ``tracker`` is any ``session.tracker.Tracker`` (e.g. ``JsonlTracker``);
         every logged step's metrics stream through it.  ``chaos`` is a
         ``runtime.chaos.FaultPlan``; ``fail_at_step`` is the deprecated
-        spelling of ``FaultPlan(crash_at=...)`` and is folded into it."""
+        spelling of ``FaultPlan(crash_at=...)`` and is folded into it.
+
+        ``fleet`` is a ``runtime.fleet.FleetController``: the loop feeds it
+        heartbeats and, on replica loss or a persistent straggler, re-plans
+        elastically — the session hands the loop a ``make_step`` factory so
+        the re-plan arm can re-jit the step for the shrunk plan; the
+        session's ``plan``/``train_step`` are updated to the final plan on
+        the way out."""
         if self.abstract:
             raise RuntimeError("abstract sessions cannot run; use .lower()")
         if self._next_step:
@@ -177,11 +185,25 @@ class TrainSession:
             ckpt_dir=str(ckpt_dir) if ckpt_dir else None,
             log_every=log_every if log_every is not None else max(1, total // 20),
             keep_ckpts=keep_ckpts, async_ckpt=async_ckpt)
+        def make_step(new_plan):
+            # re-jit for a shrunk plan (the elastic re-plan arm); the new
+            # step reads the SAME resilience config, so the consensus gate
+            # re-derives its replica count from the new plan
+            step = stepfn.make_train_step(self.cfg, new_plan, self.train_cfg,
+                                          self.mesh)
+            return jax.jit(step,
+                           donate_argnums=(0,) if self._donate else ())
+
         out = run_training(self.state, self.train_step, self.batches, loop_cfg,
                            plan=self.plan, log=log, tracker=tracker,
                            resilience=self.train_cfg.resilience,
-                           chaos=chaos, ckpt_retry=ckpt_retry)
+                           chaos=chaos, fleet=fleet,
+                           make_step=make_step if fleet is not None else None,
+                           ckpt_retry=ckpt_retry)
         self.state = out["state"]
+        if out.get("replans"):
+            self.plan = out["plan"]
+            self.train_step = make_step(self.plan)
         self._next_step = total
         return out
 

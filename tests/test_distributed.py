@@ -136,3 +136,59 @@ def test_recipe_mesh_factorization():
         print("MESH_OK")
     """)
     assert "MESH_OK" in out
+
+
+def test_consensus_skip_bitwise_identical_across_replicas():
+    """ISSUE-9 acceptance: one divergent replica's gradient on a real dp>=2
+    mesh must yield the IDENTICAL vote on every replica — survivors update,
+    the divergent shard is masked, and every device holds bit-identical
+    params afterwards.  An all-replicas-bad step must skip fleet-wide with
+    params frozen on every shard."""
+    out = _run("""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core import stepfn
+        from repro.core.recipe import ParallelismConfig
+        cfg = get_config("granite_3_2b").reduced()
+        key = jax.random.PRNGKey(0)
+        B, S, R = 4, 32, 2
+        mesh = Mesh(np.array(jax.devices()).reshape(1,2,1,1),
+                    ("pod","data","pp","tp"))
+        plan = ParallelismConfig(dp=2, zero_stage=1)
+        batch = {"tokens": jax.random.randint(key, (B,S), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (B,S), 0, cfg.vocab_size),
+                 "_chaos_grad_scale": jnp.ones((R,), jnp.float32)}
+        st = stepfn.init_state(cfg, plan, key)
+        sh = stepfn.state_shardings(cfg, st, mesh, plan)
+        bsh = stepfn.batch_shardings(batch, mesh)
+        with mesh:
+            step = jax.jit(stepfn.make_train_step(cfg, plan, mesh=mesh),
+                           in_shardings=(sh, bsh), out_shardings=(sh, None))
+            def poisoned(bad):
+                s = np.ones((R,), np.float32); s[list(bad)] = np.nan
+                return dict(batch, _chaos_grad_scale=jnp.asarray(s))
+            def shards_equal(state):
+                w = state["params"]["blocks"]["mlp"]["w_gate"]
+                raw = [np.asarray(s.data) for s in w.addressable_shards]
+                return all(np.array_equal(raw[0], r) for r in raw[1:])
+            # one divergent replica: masked, not skipped, either way round
+            for bad in ([0], [1]):
+                st2, m = step(st, poisoned(bad))
+                assert float(m["skipped"]) == 0.0, bad
+                assert float(m["bad_replicas"]) == 1.0, bad
+                assert float(m["n_replicas"]) == 2.0
+                assert shards_equal(st2), "replicas must agree bitwise"
+            # all replicas bad: fleet-wide skip, params frozen on all shards
+            before = np.asarray(
+                st["params"]["blocks"]["mlp"]["w_gate"].addressable_shards[0].data)
+            st3, m = step(st, poisoned([0, 1]))
+            assert float(m["skipped"]) == 1.0
+            assert float(m["bad_replicas"]) == 2.0
+            assert shards_equal(st3)
+            after = np.asarray(
+                st3["params"]["blocks"]["mlp"]["w_gate"].addressable_shards[0].data)
+            assert np.array_equal(before, after), "skip must freeze params"
+        print("CONSENSUS_BITWISE_OK")
+    """, devices=2)
+    assert "CONSENSUS_BITWISE_OK" in out

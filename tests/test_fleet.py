@@ -1,0 +1,407 @@
+"""Elastic fleet recovery: skip-consensus determinism, FleetController
+liveness/straggler detection, plan shrinking, the loop's re-plan arm
+(replica loss → restore under the shrunk plan → bit-exact resume), anomaly
+data forensics, and measured-straggler events — chaos-injected end-to-end,
+nothing mocked."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_mod
+from repro.core import stepfn
+from repro.core.recipe import ParallelismConfig
+from repro.data.pipeline import batch_fingerprint
+from repro.runtime.chaos import FaultPlan
+from repro.runtime.fleet import FleetConfig, FleetController, shrink_plan
+from repro.runtime.resilience import ResilienceConfig
+from repro.runtime.train_loop import LoopConfig, run_training
+from repro.session.tracker import InMemoryTracker
+
+
+# ---------------------------------------------------------------------------
+# helpers (mirror tests/test_resilience.py)
+# ---------------------------------------------------------------------------
+
+def _setup(steps, rs=None, gas=1, replicas=1, seed=0, plan=None):
+    cfg = cfg_mod.get_config("granite_3_2b").reduced()
+    if plan is None:
+        plan = ParallelismConfig(gas=gas)
+    if rs is None:
+        rs = ResilienceConfig(consensus_replicas=replicas)
+    tcfg = stepfn.TrainConfig(peak_lr=1e-3, total_steps=steps, warmup=2,
+                              resilience=rs)
+    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(seed), tcfg)
+    step_fn = jax.jit(stepfn.make_train_step(cfg, plan, tcfg))
+    return cfg, plan, state, step_fn
+
+
+def _batches(cfg, batch=4, seq=16):
+    def fn(step):
+        k = jax.random.PRNGKey(1000 + step)
+        return {"tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size),
+                "labels": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)}
+    return fn
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a["params"]),
+                               jax.tree_util.tree_leaves(b["params"])))
+
+
+def _replica_scale(R, bad, value=np.nan):
+    s = np.ones((R,), np.float32)
+    for r in bad:
+        s[r] = value
+    return jnp.asarray(s)
+
+
+# ---------------------------------------------------------------------------
+# skip-consensus determinism (device side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R", [2, 4])
+def test_consensus_verdict_independent_of_which_replica(R):
+    """The voted verdict must be identical no matter WHICH replica saw the
+    bad micro-batch — that is the whole point of the consensus reduce."""
+    cfg, plan, state, step_fn = _setup(8, replicas=R, gas=1)
+    batches = _batches(cfg, batch=2 * R)
+    verdicts = []
+    for bad_replica in range(R):
+        batch = dict(batches(0),
+                     _chaos_grad_scale=_replica_scale(R, [bad_replica]))
+        _, m = step_fn(state, batch)
+        verdicts.append((float(m["skipped"]), float(m["bad_replicas"]),
+                         float(m["n_replicas"])))
+    assert len(set(verdicts)) == 1, verdicts
+    assert verdicts[0] == (0.0, 1.0, float(R)), \
+        "a single divergent replica must be masked, not skip the fleet"
+
+
+@pytest.mark.parametrize("R", [2, 4])
+def test_consensus_minority_masked_survivors_update(R):
+    cfg, plan, state, step_fn = _setup(8, replicas=R)
+    batch = dict(_batches(cfg, batch=2 * R)(0),
+                 _chaos_grad_scale=_replica_scale(R, [R - 1]))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["skipped"]) == 0.0
+    assert float(m["bad_replicas"]) == 1.0
+    assert np.isfinite(float(m["loss"]))
+    assert not _params_equal(before, state2), "survivors must still update"
+
+
+def test_consensus_all_bad_skips_fleetwide():
+    R = 4
+    cfg, plan, state, step_fn = _setup(8, replicas=R)
+    batch = dict(_batches(cfg, batch=2 * R)(0),
+                 _chaos_grad_scale=_replica_scale(R, range(R)))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["skipped"]) == 1.0
+    assert float(m["bad_replicas"]) == float(R)
+    assert _params_equal(before, state2)
+    assert float(state2["rstat"]["n"]) == 0, "skipped step must not feed EMA"
+
+
+def test_consensus_strict_mode_any_bad_replica_skips():
+    R = 4
+    rs = ResilienceConfig(consensus_replicas=R, mask_divergent_replicas=False)
+    cfg, plan, state, step_fn = _setup(8, rs=rs)
+    batch = dict(_batches(cfg, batch=2 * R)(0),
+                 _chaos_grad_scale=_replica_scale(R, [1]))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state2, m = step_fn(state, batch)
+    assert float(m["skipped"]) == 1.0, "strict mode: one bad replica → skip"
+    assert _params_equal(before, state2)
+
+
+def test_consensus_off_matches_single_replica_numerics():
+    """consensus_replicas=0 without a mesh keeps the PR-8 path bit-for-bit."""
+    cfg, plan, state, step_fn = _setup(8, rs=ResilienceConfig())
+    _, plan2, state2, step2 = _setup(
+        8, rs=ResilienceConfig(consensus=False))
+    b = _batches(cfg)(0)
+    s1, m1 = step_fn(state, b)
+    s2, m2 = step2(state2, b)
+    assert float(m1["loss"]) == float(m2["loss"])
+    assert _params_equal(s1, s2)
+    assert float(m1["n_replicas"]) == 1.0
+
+
+def test_consensus_clean_step_matches_plain_loss():
+    """On clean data the consensus accumulation must agree with the plain
+    single-verdict step (same batch, same params) to float tolerance."""
+    R = 4
+    cfg, plan, state, step_fn = _setup(8, replicas=R)
+    _, _, state0, step0 = _setup(8, rs=ResilienceConfig(consensus=False))
+    b = _batches(cfg, batch=2 * R)(0)
+    _, m = step_fn(state, b)
+    _, m0 = step0(state0, b)
+    assert abs(float(m["loss"]) - float(m0["loss"])) < 1e-5
+    assert float(m["skipped"]) == 0.0 and float(m["bad_replicas"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# FleetController units
+# ---------------------------------------------------------------------------
+
+def test_fleet_mark_lost_yields_decision_once():
+    f = FleetController(4)
+    f.mark_lost(2, step=10, reason="chaos")
+    d = f.observe(10)
+    assert d is not None and d.kind == "replica_lost" and d.replica == 2
+    assert f.observe(11) is None, "decision must be consumed"
+    assert f.n_alive == 3 and not f.alive(2)
+
+
+def test_fleet_missed_heartbeats_presumed_lost():
+    f = FleetController(2, FleetConfig(miss_patience=3))
+    for s in range(4):
+        f.heartbeat(0, s, 1.0)
+        f.heartbeat(1, s, 1.0)
+    for s in range(4, 8):                    # replica 1 goes silent
+        f.heartbeat(0, s, 1.0)
+        d = f.observe(s)
+    assert d is not None and d.kind == "replica_lost" and d.replica == 1
+    assert d.detail["reason"] == "missed_heartbeats"
+
+
+def test_fleet_persistent_straggler_detected_transient_ignored():
+    cfg = FleetConfig(straggler_factor=2.0, straggler_patience=3)
+    f = FleetController(3, cfg)
+    for s in range(4):                       # healthy baseline
+        for r in range(3):
+            f.heartbeat(r, s, 1.0)
+        assert f.observe(s) is None
+    f.heartbeat(0, 4, 1.0); f.heartbeat(1, 4, 1.0)
+    f.heartbeat(2, 4, 10.0)                  # one slow step: transient
+    assert f.observe(4) is None
+    d = None
+    for s in range(5, 10):                   # persistent slowness
+        f.heartbeat(0, s, 1.0); f.heartbeat(1, s, 1.0)
+        f.heartbeat(2, s, 10.0)
+        d = f.observe(s)
+        if d is not None:
+            break
+    assert d is not None and d.kind == "straggler" and d.replica == 2
+    assert d.detail["slowdown"] > cfg.straggler_factor
+
+
+def test_shrink_plan_prefers_dp_then_pp():
+    p = shrink_plan(ParallelismConfig(dp=4, pp=2, gas=2))
+    assert (p.dp, p.pp) == (3, 2), "dp has slack — pipeline untouched"
+    p = shrink_plan(ParallelismConfig(dp=1, pp=4, gas=8), n_layers=8)
+    assert (p.dp, p.pp) == (1, 2) and p.gas >= p.pp
+    with pytest.raises(ValueError):
+        shrink_plan(ParallelismConfig(dp=1, pp=1))
+
+
+def test_shrink_plan_result_validates():
+    for plan, layers in [(ParallelismConfig(dp=2, pp=4, gas=4), 8),
+                         (ParallelismConfig(dp=1, pp=4, gas=4), 8),
+                         (ParallelismConfig(dp=1, pp=4, vpp=2, gas=8), 8)]:
+        q = shrink_plan(plan, n_layers=layers)
+        if q.pp > 1:
+            q.validate(layers)
+
+
+# ---------------------------------------------------------------------------
+# loop integration: replica loss → elastic re-plan → bit-exact resume
+# ---------------------------------------------------------------------------
+
+def _loop_setup(steps, plan, tmp_path, seed=0):
+    cfg = cfg_mod.get_config("granite_3_2b").reduced()
+    tcfg = stepfn.TrainConfig(peak_lr=1e-3, total_steps=steps, warmup=2,
+                              resilience=ResilienceConfig())
+    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(seed), tcfg)
+
+    def make_step(p):
+        return jax.jit(stepfn.make_train_step(cfg, p, tcfg))
+
+    return cfg, state, make_step
+
+
+def test_replica_loss_replan_resumes_bit_exact(tmp_path):
+    """Losing a dp replica mid-run must re-plan to dp-1, restore the last
+    good checkpoint, and from there produce BIT-IDENTICAL params to a clean
+    run of the shrunk plan (no mesh → dp is bookkeeping, numerics shared)."""
+    steps = 12
+    plan2 = ParallelismConfig(dp=2)
+    cfg, state, make_step = _loop_setup(steps, plan2, tmp_path)
+    batches = _batches(cfg)
+    tracker = InMemoryTracker()
+    chaos = FaultPlan(lose_replica={7: 1})
+    fleet = FleetController(2)
+    out = run_training(
+        state, make_step(plan2), batches,
+        LoopConfig(total_steps=steps, ckpt_dir=str(tmp_path / "ck"),
+                   ckpt_every=4, async_ckpt=False, log_every=100),
+        plan=plan2, log=lambda s: None, tracker=tracker,
+        chaos=chaos, fleet=fleet, make_step=make_step)
+
+    assert out["replans"] == 1
+    assert out["plan"].dp == 1
+    replans = [e for e in out["events"] if e.kind == "replan"]
+    assert len(replans) == 1
+    d = replans[0].detail
+    assert d["trigger"] == "replica_lost" and d["replica"] == 1
+    assert d["restored_step"] == 4 and d["steps_lost"] == 4
+    assert d["latency_s"] >= 0
+    assert chaos.counts()["replica_lost"] == 1
+    kinds = [e["event"] for e in tracker.events]
+    assert "replica_lost" in kinds and "replan" in kinds
+
+    # clean reference: the shrunk plan from scratch, same data schedule
+    plan1 = ParallelismConfig(dp=1)
+    _, state1, mk1 = _loop_setup(steps, plan1, tmp_path)
+    ref = run_training(
+        state1, mk1(plan1), batches,
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100),
+        plan=plan1, log=lambda s: None)
+    assert _params_equal(out["state"], ref["state"]), \
+        "post-replan trajectory must bit-match the shrunk plan's clean run"
+
+
+def test_replan_without_checkpoint_uses_live_state(tmp_path):
+    """No ckpt_dir: the live params are clean, so the re-plan converts them
+    in place and loses zero steps."""
+    steps = 8
+    plan2 = ParallelismConfig(dp=2)
+    cfg, state, make_step = _loop_setup(steps, plan2, tmp_path)
+    out = run_training(
+        state, make_step(plan2), _batches(cfg),
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100),
+        plan=plan2, log=lambda s: None,
+        chaos=FaultPlan(lose_replica={3: 0}),
+        fleet=FleetController(2), make_step=make_step)
+    assert out["replans"] == 1 and out["plan"].dp == 1
+    d = [e for e in out["events"] if e.kind == "replan"][0].detail
+    assert d["steps_lost"] == 0 and d["restored_step"] is None
+
+
+def test_replan_unavailable_without_step_factory(tmp_path):
+    steps = 6
+    plan2 = ParallelismConfig(dp=2)
+    cfg, state, make_step = _loop_setup(steps, plan2, tmp_path)
+    out = run_training(
+        state, make_step(plan2), _batches(cfg),
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100),
+        plan=plan2, log=lambda s: None,
+        chaos=FaultPlan(lose_replica={2: 1}),
+        fleet=FleetController(2))          # no make_step
+    assert out["replans"] == 0
+    kinds = [e.kind for e in out["events"]]
+    assert "replan_unavailable" in kinds
+
+
+def test_fleet_straggler_triggers_replan(tmp_path):
+    """A chaos-injected persistent straggler (simulated peer heartbeats)
+    must be dropped from the fleet via the re-plan arm."""
+    steps = 14
+    plan2 = ParallelismConfig(dp=2)
+    cfg, state, make_step = _loop_setup(steps, plan2, tmp_path)
+    t = {"now": 0.0}
+
+    def clock():
+        return t["now"]
+
+    # give every step a measurable 1s duration on the fake clock
+    chaos = FaultPlan(slow_steps={i: 1.0 for i in range(steps)},
+                      sleep=lambda d: t.__setitem__("now", t["now"] + d),
+                      straggle_replica={1: (4, 10.0)})
+    fleet = FleetController(
+        2, FleetConfig(straggler_factor=3.0, straggler_patience=3))
+    out = run_training(
+        state, make_step(plan2), _batches(cfg),
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100,
+                   step_deadline_s=1e9),
+        plan=plan2, log=lambda s: None, chaos=chaos, fleet=fleet,
+        make_step=make_step, clock=clock)
+    assert out["replans"] == 1 and out["plan"].dp == 1
+    d = [e for e in out["events"] if e.kind == "replan"][0].detail
+    assert d["trigger"] == "straggler" and d["replica"] == 1
+    assert any(k.startswith("straggle_replica") for k in chaos.counts())
+
+
+# ---------------------------------------------------------------------------
+# satellites: forensics, measured straggler events
+# ---------------------------------------------------------------------------
+
+def test_skip_event_logs_data_forensics(tmp_path):
+    """A skip event must name the offending data index, its content hash,
+    and the bad micro-batches — and the logged index must match the chaos
+    plan's injected one."""
+    steps = 8
+    plan = ParallelismConfig(gas=4)
+    cfg, state, make_step = _loop_setup(steps, plan, tmp_path)
+    batches = _batches(cfg, batch=4)
+    chaos = FaultPlan(nan_grad_steps=(5,), gas=4)
+    tracker = InMemoryTracker()
+    run_training(
+        state, make_step(plan), batches,
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100),
+        plan=plan, log=lambda s: None, tracker=tracker, chaos=chaos)
+    skips = [e for e in tracker.events if e["event"] == "skip"]
+    assert len(skips) == 1
+    ev = skips[0]
+    assert ev["data_index"] == 5, "logged index must match the injected one"
+    assert ev["batch_hash"] == batch_fingerprint(batches(5))
+    assert ev["bad_micros"] == [0, 1, 2, 3]
+
+
+def test_consensus_skip_event_kind(tmp_path):
+    """A fleet-voted skip lands as ``consensus_skip``, with the vote detail."""
+    steps = 4
+    R = 2
+    plan = ParallelismConfig()
+    cfg = cfg_mod.get_config("granite_3_2b").reduced()
+    rs = ResilienceConfig(consensus_replicas=R)
+    tcfg = stepfn.TrainConfig(peak_lr=1e-3, total_steps=steps, warmup=2,
+                              resilience=rs)
+    state = stepfn.init_state(cfg, plan, jax.random.PRNGKey(0), tcfg)
+    step_fn = jax.jit(stepfn.make_train_step(cfg, plan, tcfg))
+    tracker = InMemoryTracker()
+    chaos = FaultPlan(nan_grad_steps=(1,), replicas=R)
+    out = run_training(
+        state, step_fn, _batches(cfg), LoopConfig(
+            total_steps=steps, ckpt_dir=None, log_every=100),
+        plan=plan, log=lambda s: None, tracker=tracker,
+        resilience=rs, chaos=chaos)
+    assert out["skipped_steps"] == 1
+    ev = [e for e in tracker.events if e["event"] == "consensus_skip"]
+    assert len(ev) == 1
+    assert ev[0]["n_replicas"] == float(R)
+    assert ev[0]["bad_replicas"] == float(R)
+    assert ev[0]["data_index"] == 1
+
+
+def test_measured_straggler_event_with_slowdown(tmp_path):
+    """A slow step below the watchdog deadline still lands as a structured
+    ``straggler`` event with the measured slowdown factor, and the chaos
+    harness records its ``slow_step`` injections."""
+    steps = 8
+    plan = ParallelismConfig()
+    cfg, state, make_step = _loop_setup(steps, plan, tmp_path)
+    t = {"now": 0.0}
+    slow = {i: 1.0 for i in range(steps)}
+    slow[5] = 10.0
+    chaos = FaultPlan(slow_steps=slow,
+                      sleep=lambda d: t.__setitem__("now", t["now"] + d))
+    tracker = InMemoryTracker()
+    out = run_training(
+        state, make_step(plan), _batches(cfg),
+        LoopConfig(total_steps=steps, ckpt_dir=None, log_every=100,
+                   step_deadline_s=1e9, straggler_factor=4.0),
+        plan=plan, log=lambda s: None, tracker=tracker, chaos=chaos,
+        clock=lambda: t["now"])
+    st = [e for e in tracker.events
+          if e["event"] == "straggler" and e.get("source") == "measured"]
+    assert len(st) == 1
+    assert st[0]["step"] == 5
+    assert 8.0 < st[0]["slowdown"] < 12.0
+    assert chaos.counts()["slow_step"] == steps
