@@ -1,0 +1,29 @@
+"""Lowering auditor: static plan/sharding/kernel lint over jaxpr + HLO.
+
+The dry-run lowers every recipe point abstractly; this package *audits*
+those lowerings instead of just costing them.  Importing it registers the
+built-in passes in canonical order:
+
+  collectives  — HLO collectives vs the plan's predicted set (+ overlap_zero
+                 loop-placement contract)
+  donation     — donate_argnums buffers actually aliased in compiled HLO
+  dtype        — f32 upcast leaks on the bf16 matmul path (jaxpr)
+  replication  — optimizer moments carry a ZeRO axis when stage ≥ 1
+  kernels      — Pallas grid-spec validation (divisibility, bounds,
+                 coverage, write races)
+  recompile    — Python-value-dependent shapes in jit entry points
+
+CLI gate: ``python -m repro.launch.lint --all-configs --fail-on warning``.
+"""
+
+from repro.analysis.findings import (  # noqa: F401
+    Finding, Report, Severity, load_baseline, save_baseline)
+from repro.analysis.registry import (  # noqa: F401
+    LintPass, get_pass, register_pass, registered_passes, run_passes)
+from repro.analysis import collectives as _collectives  # noqa: F401,E402
+from repro.analysis import memory as _memory            # noqa: F401,E402
+from repro.analysis import kernels as _kernels          # noqa: F401,E402
+from repro.analysis import recompile as _recompile      # noqa: F401,E402
+from repro.analysis.context import (  # noqa: F401
+    DonationInfo, LintContext, make_decode_context, make_eval_context,
+    make_train_context)

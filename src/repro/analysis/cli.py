@@ -1,0 +1,277 @@
+"""Importable core of the lint CLI (``repro.launch.lint`` is the thin
+launcher that pins ``XLA_FLAGS`` before jax initializes).
+
+One *lint cell* per registered config: the arch's recipe point from
+``launch.plans.TRAIN_PLAN``, miniaturized onto ≤16 fake CPU devices with the
+plan's *structure* preserved — tp>1 stays tensor-parallel, pp>1 keeps a
+2-stage pipeline, the ZeRO stage is kept verbatim, and dtype is forced to
+bf16 so the upcast audit has a contract to check.  The full-scale plan and
+the lint plan lower through identical code paths (same ``TrainSession``
+composition the dry-run uses), so a pass over the lint cell audits the same
+partitioning decisions GSPMD would make at paper scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.findings import Report, Severity, load_baseline, save_baseline
+from repro.analysis.registry import run_passes
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_BASELINE = REPO_ROOT / "lint_baseline.json"
+
+_LINT_SEQ_LEN = 128
+_LINT_DEVICES = 16
+
+
+def lint_plan(arch: str, cfg):
+    """Miniaturize the arch's recipe point onto the fake-device world,
+    preserving plan structure (tp/pp/zero) so the audited partitioning
+    matches the full-scale lowering."""
+    from repro.core.recipe import ParallelismConfig
+    from repro.launch.plans import TRAIN_PLAN
+
+    tp_full, pp_full, zero = TRAIN_PLAN.get(arch, (2, 1, 1))
+    tp = 2 if tp_full > 1 else 1
+    pp = 2 if pp_full > 1 and cfg.n_layers % 2 == 0 else 1
+    dp = 2
+    gas = 2 * pp                      # keeps gas % pp == 0 for vpp variants
+    return ParallelismConfig(tp=tp, pp=pp, dp=dp, pods=1, mbs=1, gas=gas,
+                             zero_stage=zero)
+
+
+def lint_mesh(plan):
+    """(pod=1, data, pp, tp) mesh over the first world-many fake devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    world = plan.tp * plan.pp * plan.dp
+    devs = jax.devices()
+    if len(devs) < world:
+        raise RuntimeError(
+            f"lint needs {world} devices but found {len(devs)} — run via "
+            f"repro.launch.lint (it pins XLA_FLAGS before jax loads)")
+    arr = np.array(devs[:world]).reshape(1, plan.dp, plan.pp, plan.tp)
+    return Mesh(arr, ("pod", "data", "pp", "tp"))
+
+
+def lint_config(arch: str):
+    """Reduced config with the compute dtype forced to bf16 (reduced()
+    defaults to f32, which would no-op the upcast audit)."""
+    from repro import configs as cfg_mod
+    return dataclasses.replace(cfg_mod.get_config(arch).reduced(),
+                               dtype="bfloat16")
+
+
+def build_context(arch: str, *, kind: str = "train"):
+    from repro.analysis.context import (
+        make_decode_context, make_eval_context, make_train_context)
+
+    cfg = lint_config(arch)
+    plan = lint_plan(arch, cfg)
+    mesh = lint_mesh(plan)
+    maker = {"train": make_train_context, "eval": make_eval_context,
+             "decode": make_decode_context}[kind]
+    kw = {"seq_len": _LINT_SEQ_LEN} if kind in ("train", "eval") else {}
+    with mesh:
+        return maker(cfg, plan, mesh, **kw)
+
+
+def lint_cell(arch: str, *, kind: str = "train",
+              passes: Optional[Sequence[str]] = None,
+              baseline: Optional[Dict[str, List[str]]] = None) -> Report:
+    """Run the (selected) passes over one cell → a Report, baseline applied."""
+    ctx = build_context(arch, kind=kind)
+    report = Report(cell=ctx.cell, meta=ctx.describe())
+    with ctx.mesh:
+        run_passes(ctx, names=passes, report=report)
+    if baseline:
+        report.apply_baseline(baseline.get(ctx.cell, []))
+    return report
+
+
+def run_lint(archs: Sequence[str], *, kind: str = "train",
+             passes: Optional[Sequence[str]] = None,
+             baseline_path: Optional[Path] = None,
+             update_baseline: bool = False,
+             fail_on: str = "warning", json_out: Optional[Path] = None,
+             verbose: bool = True, log=print) -> int:
+    """Lint every cell; exit 0 iff no active finding ≥ ``fail_on``."""
+    threshold = Severity.parse(fail_on)
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    reports: List[Report] = []
+    failed_cells: List[str] = []
+    for arch in archs:
+        try:
+            rep = lint_cell(arch, kind=kind, passes=passes, baseline=baseline)
+        except Exception as e:  # noqa: BLE001 — a cell that cannot lower fails the gate
+            from repro.analysis.findings import Finding
+            rep = Report(cell=f"{arch}__{kind}", meta={"arch": arch})
+            rep.add(Finding(
+                pass_name="lint", code="cell-failed", severity=Severity.ERROR,
+                where=arch,
+                message=f"cell did not lower: {type(e).__name__}: {e}"))
+        reports.append(rep)
+        active = rep.active(threshold)
+        if active:
+            failed_cells.append(rep.cell)
+        if verbose:
+            log(rep.format_text(verbose=False))
+
+    if update_baseline and baseline_path:
+        cells = {r.cell: [f.fingerprint for f in r.active(threshold)]
+                 for r in reports}
+        save_baseline(baseline_path, {c: fps for c, fps in cells.items() if fps})
+        log(f"[lint] baseline written: {baseline_path}")
+        return 0
+    if json_out:
+        json_out.parent.mkdir(parents=True, exist_ok=True)
+        json_out.write_text(json.dumps([r.to_json() for r in reports], indent=1))
+    n_find = sum(len(r.findings) for r in reports)
+    n_act = sum(len(r.active(threshold)) for r in reports)
+    log(f"[lint] {len(reports)} cell(s), {n_find} finding(s), "
+        f"{n_act} at/above '{fail_on}' "
+        f"({len(failed_cells)} failing cell(s))")
+    for c in failed_cells:
+        log(f"[lint]   FAIL {c}")
+    return 1 if failed_cells else 0
+
+
+# ---------------------------------------------------------------------------
+# --prove-gate: seeded violations, one per pass family
+# ---------------------------------------------------------------------------
+
+def prove_gate(log=print) -> int:
+    """Seed one violation per pass family and require the pass to catch it
+    (and only it) — run in CI next to the clean sweep so a silently-dead
+    pass cannot keep the gate green."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.findings import Finding  # noqa: F401 — re-export site
+    from repro.analysis.kernels import KernelArg, KernelCapture, check_kernel
+    from repro.analysis.memory import audit_donation, f32_dot_findings
+    from repro.analysis.recompile import probe_shape_dependence
+    from repro.analysis.collectives import CollectiveAuditPass
+    from repro.analysis.context import DonationInfo, LintContext
+    from repro.core.recipe import ParallelismConfig
+
+    ok = True
+
+    def expect(name, codes, wanted):
+        nonlocal ok
+        hit = wanted in codes
+        log(f"[lint] prove-gate {name}: "
+            f"{'caught ' + wanted if hit else 'MISSED (got ' + str(codes) + ')'}")
+        ok &= hit
+
+    # collectives: a sharded→replicated jit — the resulting all-gather is a
+    # reshard no dp-only zero-0 plan predicts (zero_stage=0 matters: the
+    # default stage-1 plan legitimately re-gathers params)
+    if len(jax.devices()) >= 2:
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        mesh = Mesh(np.array(jax.devices()[:2]).reshape(2), ("data",))
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        lowered = jax.jit(
+            lambda a: a * 2,
+            in_shardings=NamedSharding(mesh, P("data", None)),
+            out_shardings=NamedSharding(mesh, P(None, None))).lower(x)
+        ctx = LintContext(cell="seeded__collectives", kind="decode",
+                          plan=ParallelismConfig(zero_stage=0), mesh=mesh,
+                          lower_fn=lambda: lowered)
+        codes = [f.code for f in CollectiveAuditPass().run(ctx)]
+        expect("collectives", codes, "unexpected-collective")
+    else:
+        log("[lint] prove-gate collectives: skipped (single device)")
+
+    # donation: donate an argument the function never returns (alias dropped)
+    donated = {"w": jax.ShapeDtypeStruct((256, 256), jnp.float32)}
+    lowered = jax.jit(lambda s, x: (x * 2.0,),
+                      donate_argnums=(0,)).lower(
+        donated, jax.ShapeDtypeStruct((8,), jnp.float32))
+    hlo = lowered.compile().as_text()
+    codes = [f.code for f in audit_donation(
+        hlo, DonationInfo(argnums=(0,), trees=(donated,)))]
+    expect("donation", codes, "donation-dropped")
+
+    # dtype: an all-f32 dot on a bf16-config path
+    cfg = lint_config("granite_3_2b")
+    jx = jax.make_jaxpr(lambda a, b: a @ b)(
+        jnp.zeros((32, 64)), jnp.zeros((64, 32)))
+    codes = [f.code for f in f32_dot_findings(jx, cfg)]
+    expect("dtype", codes, "f32-upcast-dot")
+
+    # kernels: a grid spec whose map revisits a tile along a parallel dim
+    cap = KernelCapture(
+        kernel="seeded", grid=(4,),
+        in_args=[KernelArg("in0", (100,), (32,), lambda i: (i,))],
+        out_args=[KernelArg("out0", (128,), (32,), lambda i: (0,))],
+        num_scalar_prefetch=0, scalar_values=(),
+        dimension_semantics=("parallel",))
+    codes = [f.code for f in check_kernel(cap)]
+    expect("kernels/divisibility", codes, "block-not-divisible")
+    expect("kernels/coverage", codes, "uncovered-output-tile")
+    expect("kernels/race", codes, "write-race")
+
+    # recompile: output length depends on a Python int
+    diff = probe_shape_dependence(
+        lambda x, n: x[:n],
+        [(jax.ShapeDtypeStruct((8,), jnp.float32), 3),
+         (jax.ShapeDtypeStruct((8,), jnp.float32), 5)])
+    expect("recompile", ["shape-depends-on-python-value"] if diff and not
+           diff.startswith("raise:") else [], "shape-depends-on-python-value")
+
+    log(f"[lint] prove-gate: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    from repro import configs as cfg_mod
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="static plan/sharding/kernel lint over jaxpr + HLO")
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--all-configs", action="store_true",
+                    help="lint every assigned architecture's recipe point")
+    ap.add_argument("--kind", default="train",
+                    choices=["train", "eval", "decode"])
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of registered passes")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="suppression file (fingerprints of accepted findings)")
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current at/above-threshold findings as accepted")
+    ap.add_argument("--fail-on", default="warning",
+                    choices=["info", "warning", "error"])
+    ap.add_argument("--json", default=None, help="write reports as JSON")
+    ap.add_argument("--prove-gate", action="store_true",
+                    help="seed one violation per pass family; exit 1 unless "
+                         "every pass catches its own")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.prove_gate:
+        return prove_gate()
+    if args.all_configs:
+        archs = list(cfg_mod.ASSIGNED)
+    elif args.arch:
+        archs = [args.arch]
+    else:
+        ap.error("--arch or --all-configs (or --prove-gate)")
+    passes = args.passes.split(",") if args.passes else None
+    return run_lint(
+        archs, kind=args.kind, passes=passes,
+        baseline_path=None if args.no_baseline else Path(args.baseline),
+        update_baseline=args.update_baseline, fail_on=args.fail_on,
+        json_out=Path(args.json) if args.json else None,
+        verbose=not args.quiet)

@@ -1,0 +1,162 @@
+"""Collective audit: diff the compiled HLO's collectives against what the
+``ParallelismConfig`` predicts.
+
+The recipe's scaling envelope assumes a specific collective set: DP grad
+reduce (all-reduce, or reduce-scatter + all-gather under ZeRO), TP activation
+collectives, PP stage-boundary permutes, EP all-to-alls for MoE.  Anything
+outside that set is a reshard the plan did not buy — the exact failure mode
+(one accidental all-gather) that erases the paper's 93%/82% efficiency at
+128 nodes.  When ``overlap_zero`` is set, the ZeRO collectives must also sit
+*inside* the GAS accumulation loop body, else nothing overlaps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import LintPass, register_pass
+from repro.launch.hlo_analysis import CollectiveOp, collective_ops
+
+# below this many per-device bytes per executed op, a collective is loop
+# plumbing / a scalar metric reduce, not a resharded tensor
+_SCALAR_BYTES = 4096
+
+
+def mesh_ways(mesh) -> Dict[str, int]:
+    """(tp, pp, dp) ways from either the raw production mesh (data, model)
+    or the factorized recipe mesh (pod, data, pp, tp)."""
+    shape = dict(mesh.shape)
+    tp = shape.get("tp", shape.get("model", 1))
+    pp = shape.get("pp", 1)
+    dp = shape.get("data", 1) * shape.get("pod", 1)
+    return {"tp": tp, "pp": pp, "dp": dp}
+
+
+def expected_collectives(cfg, plan, ways: Dict[str, int]) -> Dict[str, str]:
+    """kind -> reason it is expected under this plan (absent = unexpected).
+
+    Family expectations fold in through ``param_sharding_hints``: a family
+    whose hints shard an ``expert`` axis runs expert-parallel einsums, which
+    GSPMD lowers to all-to-alls even when ``n_experts`` is not consulted.
+    """
+    exp: Dict[str, str] = {}
+    tp, pp, dp = ways["tp"], ways["pp"], ways["dp"]
+    if dp > 1:
+        exp["all-reduce"] = "DP gradient reduce"
+    if tp > 1:
+        exp.setdefault("all-reduce", "TP activation reduce")
+        exp["all-gather"] = "TP activation gather"
+        exp["collective-permute"] = "TP reshard"
+    if plan.zero_stage >= 1 and dp > 1:
+        exp["all-gather"] = "ZeRO param re-gather"
+        exp["reduce-scatter"] = "ZeRO grad shard"
+    if plan.sequence_parallel:
+        exp["all-gather"] = "sequence-parallel gather"
+        exp["reduce-scatter"] = "sequence-parallel scatter"
+    if plan.gather_params_once:
+        exp["all-gather"] = "once-per-step param gather"
+    if pp > 1:
+        exp["collective-permute"] = "PP stage boundary"
+        # the micro-batch axis is re-indexed across the stage ring each
+        # superstep; GSPMD lowers that reshard to all-to-alls
+        exp["all-to-all"] = "PP micro-batch reshard"
+    hints = ()
+    if cfg is not None:
+        from repro.models.api import family_of
+        hints = family_of(cfg).param_sharding_hints(cfg)
+    is_moe = bool(getattr(cfg, "n_experts", 0)) or any(
+        "expert" in axes for _, axes in hints)
+    if is_moe and tp > 1:
+        exp["all-to-all"] = "MoE expert-parallel dispatch"
+    return exp
+
+
+@register_pass
+class CollectiveAuditPass(LintPass):
+    name = "collectives"
+    requires = ("hlo", "plan", "mesh")
+
+    def run(self, ctx) -> List[Finding]:
+        ops = collective_ops(ctx.hlo)
+        ways = mesh_ways(ctx.mesh)
+        exp = expected_collectives(ctx.cfg, ctx.plan, ways)
+        world = ways["tp"] * ways["pp"] * ways["dp"]
+        out: List[Finding] = []
+
+        # aggregate per kind; scalar-sized ops audited separately
+        agg: Dict[str, Dict[str, int]] = {}
+        for op in ops:
+            bucket = "scalar" if op.bytes < _SCALAR_BYTES else "tensor"
+            rec = agg.setdefault((op.kind, bucket), {
+                "count": 0, "bytes": 0, "weighted_bytes": 0, "in_loop": 0})
+            rec["count"] += 1
+            rec["bytes"] += op.bytes
+            rec["weighted_bytes"] += op.bytes * op.trip_count
+            rec["in_loop"] += int(op.in_loop)
+
+        for (kind, bucket), rec in sorted(agg.items()):
+            if world == 1:
+                out.append(Finding(
+                    pass_name=self.name, code="collective-on-unpartitioned-plan",
+                    severity=Severity.ERROR, where=kind,
+                    message=f"{rec['count']} {kind} op(s) "
+                            f"({rec['weighted_bytes']} B/step/device) in a "
+                            f"single-device plan — nothing should communicate",
+                    data=rec))
+                continue
+            if bucket == "scalar":
+                # metric reduces / loop-carried flags — expected, visible
+                out.append(Finding(
+                    pass_name=self.name, code="scalar-collective",
+                    severity=Severity.INFO, where=kind,
+                    message=f"{rec['count']} scalar-sized {kind} op(s) "
+                            f"(metrics/flags)", data=rec))
+                continue
+            if kind in exp:
+                out.append(Finding(
+                    pass_name=self.name, code="expected-collective",
+                    severity=Severity.INFO, where=kind,
+                    message=f"{rec['count']} {kind} op(s), "
+                            f"{rec['weighted_bytes']} B/step/device "
+                            f"({exp[kind]})", data=rec))
+            else:
+                out.append(Finding(
+                    pass_name=self.name, code="unexpected-collective",
+                    severity=Severity.WARNING, where=kind,
+                    message=f"{rec['count']} {kind} op(s), "
+                            f"{rec['weighted_bytes']} B/step/device, but the "
+                            f"plan (tp={ways['tp']}, pp={ways['pp']}, "
+                            f"dp={ways['dp']}, zero={ctx.plan.zero_stage}) "
+                            f"predicts none — likely an accidental reshard",
+                    data=rec))
+
+        # a DP train step that never reduces grads is silently diverging
+        if ctx.kind == "train" and ways["dp"] > 1:
+            reduces = [op for op in ops
+                       if op.kind in ("all-reduce", "reduce-scatter")
+                       and op.bytes >= _SCALAR_BYTES]
+            if not reduces:
+                out.append(Finding(
+                    pass_name=self.name, code="missing-grad-reduce",
+                    severity=Severity.ERROR, where="all-reduce",
+                    message=f"dp={ways['dp']} but no tensor-sized all-reduce/"
+                            f"reduce-scatter in the module — replicas never "
+                            f"exchange gradients"))
+
+        # overlap_zero contract: ZeRO collectives inside the GAS scan body
+        if (ctx.kind == "train" and ctx.plan.overlap_zero
+                and ctx.plan.zero_stage >= 1 and ctx.plan.gas > 1
+                and ways["dp"] > 1):
+            grad_ops = [op for op in ops
+                        if op.kind in ("all-reduce", "reduce-scatter")
+                        and op.bytes >= _SCALAR_BYTES]
+            if grad_ops and not any(op.in_loop for op in grad_ops):
+                out.append(Finding(
+                    pass_name=self.name, code="zero-not-overlapped",
+                    severity=Severity.WARNING, where="gas-loop",
+                    message=f"overlap_zero is set but all "
+                            f"{len(grad_ops)} grad-scale collectives sit "
+                            f"outside loop bodies — nothing hides under the "
+                            f"accumulation scan"))
+        return out

@@ -1,0 +1,242 @@
+"""``LintContext`` — lazily materialized artifacts for one lint cell.
+
+A *cell* is one abstract lowering (a train/eval/decode step for one
+(config × plan × mesh) point) plus the static kernel/entry-point surfaces
+that ride along.  Artifacts are thunks resolved at most once, so a pass that
+only needs the jaxpr never pays for an XLA compile, and a kernel-only cell
+never traces a train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.recipe import ParallelismConfig
+from repro.models.config import ModelConfig
+
+
+def _flat_paths(tree) -> List[tuple]:
+    """[(path, leaf)] with '/'-joined string paths."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((pstr, leaf))
+    return out
+
+
+@dataclasses.dataclass
+class DonationInfo:
+    """What the jit promised to donate: argnums, the donated arg trees, and
+    (when known) the FULL positional arg tuple — with it the checker can map
+    flat leaf indices onto HLO entry parameter numbers."""
+    argnums: tuple
+    trees: tuple                     # one pytree per donated argnum
+    all_args: Optional[tuple] = None  # every positional arg, in order
+
+    def leaves(self) -> List[tuple]:
+        """[(path, nbytes)] over every donated leaf."""
+        out = []
+        for tree in self.trees:
+            for pstr, leaf in _flat_paths(tree):
+                out.append((pstr, int(leaf.size) * leaf.dtype.itemsize))
+        return out
+
+    def flat_index_map(self) -> Optional[List[tuple]]:
+        """[(flat_param_index, path, nbytes)] for donated leaves, where the
+        index counts ALL args' leaves in positional order (jit's flattening)
+        — None when ``all_args`` was not recorded."""
+        if self.all_args is None:
+            return None
+        out, idx = [], 0
+        for i, arg in enumerate(self.all_args):
+            for pstr, leaf in _flat_paths(arg):
+                if i in self.argnums:
+                    out.append((idx, f"arg{i}/{pstr}" if pstr else f"arg{i}",
+                                int(leaf.size) * leaf.dtype.itemsize))
+                idx += 1
+        return out
+
+    def total_flat_leaves(self) -> Optional[int]:
+        if self.all_args is None:
+            return None
+        return sum(len(jax.tree_util.tree_leaves(a)) for a in self.all_args)
+
+
+class LintContext:
+    """Duck-typed artifact store the passes read from.
+
+    ``provides(name)`` says whether an artifact can be materialized; lazy
+    properties materialize (and cache) on first read.  Builders below wire
+    the session compositions into contexts.
+    """
+
+    def __init__(self, *, cell: str,
+                 cfg: Optional[ModelConfig] = None,
+                 plan: Optional[ParallelismConfig] = None,
+                 mesh=None, kind: str = "train",
+                 lower_fn: Optional[Callable[[], Any]] = None,
+                 jaxpr_fn: Optional[Callable[[], Any]] = None,
+                 donation: Optional[DonationInfo] = None,
+                 state_shardings_fn: Optional[Callable[[], Any]] = None,
+                 entry_points: Optional[List[Any]] = None,
+                 kernels_fn: Optional[Callable[[], List[Any]]] = None):
+        self.cell = cell
+        self.cfg = cfg
+        self.plan = plan
+        self.mesh = mesh
+        self.kind = kind
+        self._lower_fn = lower_fn
+        self._jaxpr_fn = jaxpr_fn
+        self.donation = donation
+        self._state_shardings_fn = state_shardings_fn
+        self.entry_points = entry_points
+        self._kernels_fn = kernels_fn
+        self._cache: Dict[str, Any] = {}
+
+    # -- artifact availability ----------------------------------------
+    def provides(self, name: str) -> bool:
+        return {
+            "cfg": self.cfg is not None,
+            "plan": self.plan is not None,
+            "mesh": self.mesh is not None,
+            "lowered": self._lower_fn is not None,
+            "compiled": self._lower_fn is not None,
+            "hlo": self._lower_fn is not None,
+            "jaxpr": self._jaxpr_fn is not None,
+            "donation": self.donation is not None and self._lower_fn is not None,
+            "state_shardings": self._state_shardings_fn is not None,
+            "entry_points": bool(self.entry_points),
+            "kernels": self._kernels_fn is not None,
+        }.get(name, False)
+
+    def _memo(self, key: str, thunk: Callable[[], Any]) -> Any:
+        if key not in self._cache:
+            self._cache[key] = thunk()
+        return self._cache[key]
+
+    # -- lazy artifacts -----------------------------------------------
+    @property
+    def lowered(self):
+        return self._memo("lowered", self._lower_fn)
+
+    @property
+    def compiled(self):
+        return self._memo("compiled", lambda: self.lowered.compile())
+
+    @property
+    def hlo(self) -> str:
+        return self._memo("hlo", lambda: self.compiled.as_text())
+
+    @property
+    def jaxpr(self):
+        return self._memo("jaxpr", self._jaxpr_fn)
+
+    @property
+    def state_shardings(self):
+        return self._memo("state_shardings", self._state_shardings_fn)
+
+    @property
+    def kernels(self) -> List[Any]:
+        return self._memo("kernels", self._kernels_fn)
+
+    def describe(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"kind": self.kind}
+        if self.cfg is not None:
+            d["arch"] = self.cfg.name
+        if self.plan is not None:
+            p = self.plan
+            d["plan"] = {"tp": p.tp, "pp": p.pp, "dp": p.dp, "pods": p.pods,
+                         "gas": p.gas, "vpp": p.vpp, "zero": p.zero_stage,
+                         "overlap_zero": p.overlap_zero,
+                         "sp": p.sequence_parallel}
+        if self.mesh is not None:
+            d["mesh"] = dict(self.mesh.shape)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+def _lint_batch_specs(cfg: ModelConfig, plan: ParallelismConfig,
+                      seq_len: int):
+    from repro.launch import shapes as shapes_mod
+    shape = shapes_mod.ShapeSpec("lint", "train", seq_len, plan.global_batch)
+    return shapes_mod.train_input_specs(cfg, shape)
+
+
+def make_train_context(cfg: ModelConfig, plan: ParallelismConfig, mesh, *,
+                       seq_len: int = 128, cell: Optional[str] = None,
+                       train_cfg=None) -> LintContext:
+    """Lint cell over the sharded, donated train step (the dry-run's
+    composition, miniaturized batch)."""
+    from repro.core import stepfn
+    from repro.session import TrainSession
+
+    sess = TrainSession.from_recipe(cfg, plan=plan, mesh=mesh, abstract=True,
+                                    train_cfg=train_cfg)
+    batch_specs = _lint_batch_specs(cfg, plan, seq_len)
+    cell = cell or f"{cfg.name}__train__tp{plan.tp}_pp{plan.pp}_dp{plan.dp}" \
+                   f"_vpp{plan.vpp}_z{plan.zero_stage}" \
+                   f"{'_ov' if plan.overlap_zero else ''}"
+
+    def jaxpr_fn():
+        step = stepfn.make_train_step(cfg, plan, sess.train_cfg, mesh)
+        return jax.make_jaxpr(step)(sess.state, batch_specs)
+
+    from repro.analysis.kernels import default_kernel_captures
+    from repro.analysis.recompile import default_entry_points
+    return LintContext(
+        cell=cell, cfg=cfg, plan=plan, mesh=mesh, kind="train",
+        lower_fn=lambda: sess.lower(batch_specs),
+        jaxpr_fn=jaxpr_fn,
+        donation=DonationInfo(argnums=(0,), trees=(sess.state,),
+                              all_args=(sess.state, batch_specs)),
+        state_shardings_fn=lambda: stepfn.state_shardings(
+            cfg, sess.state, mesh, plan),
+        entry_points=default_entry_points(cfg, plan),
+        kernels_fn=lambda: default_kernel_captures(cfg))
+
+
+def make_eval_context(cfg: ModelConfig, plan: ParallelismConfig, mesh, *,
+                      seq_len: int = 128,
+                      cell: Optional[str] = None) -> LintContext:
+    """Lint cell over the eval step (no optimizer, no donation) — the
+    EvalSession's lowering target."""
+    from repro.session.evalsess import EvalSession
+
+    sess = EvalSession.from_recipe(cfg, plan=plan, mesh=mesh, abstract=True)
+    cell = cell or f"{cfg.name}__eval__tp{plan.tp}_pp{plan.pp}_dp{plan.dp}"
+    return LintContext(
+        cell=cell, cfg=cfg, plan=plan, mesh=mesh, kind="eval",
+        lower_fn=lambda: sess.lower(seq_len=seq_len),
+        jaxpr_fn=lambda: sess.make_jaxpr(seq_len=seq_len))
+
+
+def make_decode_context(cfg: ModelConfig, plan: ParallelismConfig, mesh, *,
+                        batch_size: int = 16, cache_len: int = 256,
+                        cell: Optional[str] = None) -> LintContext:
+    """Lint cell over one sharded decode step (serve-side donation)."""
+    from repro.session import InferenceSession
+
+    sess = InferenceSession.from_recipe(cfg, plan=plan, mesh=mesh,
+                                        abstract=True)
+    cell = cell or f"{cfg.name}__decode__tp{plan.tp}_dp{plan.dp}"
+
+    from repro.models import api as model_api
+    import jax.numpy as jnp
+    caches = jax.eval_shape(
+        lambda p: model_api.init_cache(cfg, p, batch_size, cache_len),
+        sess.params)
+    tok = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return LintContext(
+        cell=cell, cfg=cfg, plan=plan, mesh=mesh, kind="decode",
+        lower_fn=lambda: sess.lower_decode(batch_size, cache_len),
+        donation=DonationInfo(argnums=(3,), trees=(caches,),
+                              all_args=(sess.params, tok, t, caches)))

@@ -1,0 +1,130 @@
+"""Finding / severity / report model for the lowering auditor.
+
+A *finding* is one static-analysis observation (an unexpected all-gather, a
+donated buffer the compiler did not alias, ...).  Findings carry a stable
+``fingerprint`` — a hash of (pass, code, where), deliberately excluding the
+free-text message and byte counts — so a *baseline file* can suppress known,
+reviewed findings per lint cell without pinning exact numbers.  The CI gate
+fails on any non-suppressed finding at or above ``--fail-on``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional
+
+
+class Severity(enum.IntEnum):
+    INFO = 0       # expected/contextual — never gates
+    WARNING = 1    # plan/lowering mismatch worth a human look
+    ERROR = 2      # the lowering contradicts the plan
+
+    @classmethod
+    def parse(cls, s: str) -> "Severity":
+        try:
+            return cls[s.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown severity {s!r}; one of "
+                f"{', '.join(m.name.lower() for m in cls)}") from None
+
+
+@dataclasses.dataclass
+class Finding:
+    pass_name: str                 # registered pass that produced it
+    code: str                      # stable kebab-case finding class
+    severity: Severity
+    message: str                   # human-readable, free text
+    where: str = ""                # stable location token (param path, op kind)
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    suppressed: bool = False       # set by Report.apply_baseline
+
+    @property
+    def fingerprint(self) -> str:
+        key = f"{self.pass_name}:{self.code}:{self.where}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        sup = " [suppressed]" if self.suppressed else ""
+        loc = f" @ {self.where}" if self.where else ""
+        return (f"{self.severity.name:7s} {self.pass_name}/{self.code}"
+                f"{loc}{sup}: {self.message}")
+
+
+class Report:
+    """Findings for one lint cell (one lowered program / kernel set)."""
+
+    def __init__(self, cell: str, meta: Optional[Dict[str, Any]] = None):
+        self.cell = cell
+        self.meta = dict(meta or {})
+        self.findings: List[Finding] = []
+
+    def add(self, finding: Finding) -> None:
+        self.findings.append(finding)
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def apply_baseline(self, fingerprints: Iterable[str]) -> None:
+        known = set(fingerprints)
+        for f in self.findings:
+            if f.fingerprint in known:
+                f.suppressed = True
+
+    def active(self, min_severity: Severity = Severity.WARNING) -> List[Finding]:
+        return [f for f in self.findings
+                if not f.suppressed and f.severity >= min_severity]
+
+    def worst(self) -> Optional[Severity]:
+        live = [f.severity for f in self.findings if not f.suppressed]
+        return max(live) if live else None
+
+    def format_text(self, *, verbose: bool = False) -> str:
+        shown = self.findings if verbose else \
+            [f for f in self.findings if not f.suppressed]
+        lines = [f"[lint] {self.cell}: {len(self.findings)} finding(s), "
+                 f"{len(self.active(Severity.INFO))} active"]
+        lines += ["  " + f.render() for f in shown]
+        return "\n".join(lines)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "cell": self.cell,
+            "meta": self.meta,
+            "findings": [{
+                "pass": f.pass_name, "code": f.code,
+                "severity": f.severity.name, "message": f.message,
+                "where": f.where, "fingerprint": f.fingerprint,
+                "suppressed": f.suppressed, "data": f.data,
+            } for f in self.findings],
+        }
+
+
+# ---------------------------------------------------------------------------
+# per-cell baseline (suppression) file
+# ---------------------------------------------------------------------------
+
+def load_baseline(path) -> Dict[str, List[str]]:
+    """{cell: [fingerprint, ...]} — missing file is an empty baseline."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    with open(p) as f:
+        data = json.load(f)
+    return {k: list(v) for k, v in data.get("cells", {}).items()}
+
+
+def save_baseline(path, cells: Dict[str, List[str]]) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump({"comment": "lowering-audit suppressions: cell -> reviewed "
+                              "finding fingerprints (see README, Lowering "
+                              "audit); regenerate with lint --update-baseline",
+                   "cells": {k: sorted(set(v))
+                             for k, v in sorted(cells.items())}}, f, indent=1)
+        f.write("\n")

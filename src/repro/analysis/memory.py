@@ -1,0 +1,225 @@
+"""Memory audits over compiled HLO and jaxpr.
+
+Three passes:
+
+* **donation** — every ``donate_argnums`` buffer must show up in the compiled
+  module's ``input_output_alias`` map.  A donated-but-unaliased train state is
+  2× parameter+optimizer memory at 175B; at lint scale we catch it from the
+  alias header before any allocation happens.
+* **dtype** — on a bf16 compute path, weight/activation matmuls must not run
+  in f32 (an upcast leak doubles matmul bytes and halves MXU throughput).
+  Detected from jaxpr ``dot_general`` operand dtypes; the deliberately-f32
+  logits head (vocab-dim dot) is allowlisted.
+* **replication** — under ZeRO (stage ≥ 1) with a real DP axis, optimizer
+  moments must carry a ZeRO axis in their sharding; a silently replicated
+  moment re-inflates exactly the memory ZeRO was bought to shard.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import LintPass, register_pass
+from repro.launch.hlo_analysis import entry_parameter_bytes, input_output_aliases
+
+# donated leaves below this size may legitimately be folded/unaliased
+# (scalar step counters, rstat flags) — report as INFO, not WARNING
+_SMALL_LEAF_BYTES = 1024
+
+
+def audit_donation(hlo: str, donation) -> List[Finding]:
+    """Core donation check over one compiled module's text.
+
+    ``donation`` is a ``context.DonationInfo``.  When the full positional arg
+    tuple is known and no argument was dropped by the compiler, the check is
+    per-leaf (flat leaf index ↔ HLO parameter number); otherwise it falls
+    back to count/byte accounting, which still catches a wholesale dropped
+    donation."""
+    aliases = input_output_aliases(hlo)
+    aliased_params = {a.param_number for a in aliases}
+    param_bytes = entry_parameter_bytes(hlo)
+    donated = [(p, b) for p, b in donation.leaves() if b > 0]
+    out: List[Finding] = []
+    if not donated:
+        return out
+    if not aliases:
+        total = sum(b for _, b in donated)
+        out.append(Finding(
+            pass_name="donation", code="donation-dropped",
+            severity=Severity.ERROR, where="input_output_alias",
+            message=f"jit donates {len(donated)} buffer(s) "
+                    f"({total} B unsharded) but the compiled module aliases "
+                    f"nothing — the caller re-pays the full state footprint"))
+        return out
+
+    idx_map = donation.flat_index_map()
+    n_flat = donation.total_flat_leaves()
+    if idx_map is not None and n_flat == len(param_bytes):
+        # precise: flat leaf order == HLO parameter numbering
+        for flat_idx, path, nbytes in idx_map:
+            if flat_idx not in aliased_params:
+                sev = Severity.WARNING if nbytes >= _SMALL_LEAF_BYTES \
+                    else Severity.INFO
+                out.append(Finding(
+                    pass_name="donation", code="unaliased-donation",
+                    severity=sev, where=path,
+                    message=f"donated leaf {path} ({nbytes} B unsharded) has "
+                            f"no input_output_alias entry — that buffer is "
+                            f"copied, not reused"))
+    else:
+        # aggregate: the compiler dropped/merged arguments (keep_unused=False)
+        shortfall = len(donated) - len(aliases)
+        if shortfall > 0:
+            out.append(Finding(
+                pass_name="donation", code="donation-shortfall",
+                severity=Severity.WARNING, where="aggregate",
+                message=f"{len(donated)} donated leaves but only "
+                        f"{len(aliases)} aliased outputs "
+                        f"({shortfall} buffer(s) copied, not reused)",
+                data={"donated": len(donated), "aliased": len(aliases),
+                      "entry_params": len(param_bytes)}))
+    return out
+
+
+@register_pass
+class DonationAuditPass(LintPass):
+    name = "donation"
+    requires = ("hlo", "donation")
+
+    def run(self, ctx) -> List[Finding]:
+        return audit_donation(ctx.hlo, ctx.donation)
+
+
+# ---------------------------------------------------------------------------
+# f32 upcast leaks on the bf16 matmul path
+# ---------------------------------------------------------------------------
+
+def _walk_jaxprs(jaxpr):
+    """Yield every eqn in a (Closed)Jaxpr, recursing into call/scan/while/
+    cond sub-jaxprs (matched by type name — stable across jax.core moves)."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jx.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            subs = v if isinstance(v, (tuple, list)) else (v,)
+            for s in subs:
+                if type(s).__name__ in ("Jaxpr", "ClosedJaxpr"):
+                    yield from _walk_jaxprs(s)
+
+
+def f32_dot_findings(jaxpr, cfg, *, pass_name: str = "dtype") -> List[Finding]:
+    """WARNING per distinct shape-signature of an all-f32 ``dot_general`` on
+    a bf16 compute path.  Allowlisted: dots touching the vocab dim (the
+    logits head runs f32 by design) and dots with < 2D operands (scalar
+    bookkeeping).  Mixed-precision dots (bf16 in, f32 accumulate) are fine
+    and not flagged."""
+    import jax.numpy as jnp
+    out: List[Finding] = []
+    if jnp.dtype(getattr(cfg, "dtype", "float32")) != jnp.dtype(jnp.bfloat16):
+        return out          # the audit only guards the bf16 matmul path
+    vocab = getattr(cfg, "vocab_size", -1)
+    seen: Dict[str, Dict[str, Any]] = {}
+    for eqn in _walk_jaxprs(jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        if str(lhs.dtype) != "float32" or str(rhs.dtype) != "float32":
+            continue
+        if len(lhs.shape) < 2 and len(rhs.shape) < 2:
+            continue
+        if vocab > 0 and (vocab in tuple(lhs.shape) + tuple(rhs.shape)):
+            continue
+        sig = f"{tuple(lhs.shape)}x{tuple(rhs.shape)}"
+        rec = seen.setdefault(sig, {"count": 0, "src": None})
+        rec["count"] += 1
+        if rec["src"] is None:
+            try:
+                from jax._src import source_info_util
+                rec["src"] = source_info_util.summarize(eqn.source_info)
+            except Exception:  # noqa: BLE001 — source info is best-effort
+                rec["src"] = "?"
+    for sig, rec in sorted(seen.items()):
+        out.append(Finding(
+            pass_name=pass_name, code="f32-upcast-dot",
+            severity=Severity.WARNING, where=sig,
+            message=f"{rec['count']} all-f32 dot_general(s) of shape {sig} on "
+                    f"a bf16 compute path (first at {rec['src']}) — an upcast "
+                    f"leak doubles matmul traffic", data=rec))
+    return out
+
+
+@register_pass
+class DtypeAuditPass(LintPass):
+    name = "dtype"
+    requires = ("jaxpr", "cfg")
+
+    def run(self, ctx) -> List[Finding]:
+        return f32_dot_findings(ctx.jaxpr, ctx.cfg, pass_name=self.name)
+
+
+# ---------------------------------------------------------------------------
+# silently replicated optimizer state under ZeRO
+# ---------------------------------------------------------------------------
+
+@register_pass
+class ReplicationAuditPass(LintPass):
+    name = "replication"
+    requires = ("state_shardings", "donation", "plan", "mesh")
+
+    def run(self, ctx) -> List[Finding]:
+        from repro.analysis.collectives import mesh_ways
+        from repro.core.zero import zero_shard
+
+        plan = ctx.plan
+        if plan.zero_stage < 1 or mesh_ways(ctx.mesh)["dp"] <= 1:
+            return []
+        zero_axes = tuple(a for a in ("pod", "data")
+                          if a in ctx.mesh.axis_names and ctx.mesh.shape[a] > 1)
+        if not zero_axes:
+            return []
+        state = ctx.donation.trees[0]
+        shardings = ctx.state_shardings
+        out: List[Finding] = []
+        for moment in ("m", "v"):
+            sh_tree = shardings.get("opt", {}).get(moment)
+            leaf_tree = state.get("opt", {}).get(moment)
+            if sh_tree is None or leaf_tree is None:
+                continue
+            flat_sh = _flat(sh_tree)
+            flat_leaf = dict(_flat(leaf_tree))
+            for path, ns in flat_sh:
+                leaf = flat_leaf.get(path)
+                if leaf is None or not hasattr(ns, "spec"):
+                    continue
+                used = set()
+                for p in ns.spec:
+                    if p is not None:
+                        used.update(p if isinstance(p, tuple) else (p,))
+                if used & set(zero_axes):
+                    continue
+                # could zero_shard have sharded it? if yes, it SHOULD have
+                if zero_shard(ns.spec, leaf.shape, ctx.mesh, zero_axes) != ns.spec:
+                    nbytes = int(leaf.size) * leaf.dtype.itemsize
+                    out.append(Finding(
+                        pass_name=self.name, code="replicated-opt-state",
+                        severity=Severity.WARNING,
+                        where=f"opt/{moment}/{path}",
+                        message=f"ZeRO-{plan.zero_stage} plan but optimizer "
+                                f"moment opt/{moment}/{path} "
+                                f"({leaf.shape}, {nbytes} B) carries no "
+                                f"{zero_axes} axis — replicated across "
+                                f"DP", data={"shape": list(leaf.shape)}))
+        return out
+
+
+def _flat(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((pstr, leaf))
+    return out

@@ -1,0 +1,182 @@
+"""Recompilation-hazard pass: Python-value-dependent shapes in jit entries.
+
+A jit entry point whose *output shapes* depend on the concrete value of a
+Python scalar argument re-traces on every distinct value — the serve loop
+(``t`` advancing every token) or the GAS loop would compile thousands of
+variants.  Probing is shape-only: ``jax.eval_shape`` the entry twice with
+the Python-typed leaves mutated; any output-shape difference is a hazard.
+(Array-typed leaves are traced by shape, so they cannot defeat the cache —
+the probe targets exactly the leaves jit specializes by value.)
+
+Deliberate width-specialized templates (the scheduler's pow-2 prefill
+buckets, flash block-size static args) are bounded-cardinality by
+construction and are declared via ``ProbeSpec(bounded=True)``, which reports
+INFO instead of ERROR.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import LintPass, register_pass
+
+
+@dataclasses.dataclass
+class ProbeSpec:
+    """One jit entry point + ≥2 arg tuples differing only in Python-typed
+    (or value-specializing) leaves."""
+    name: str
+    fn: Callable
+    variants: Sequence[Tuple[Any, ...]]
+    bounded: bool = False      # deliberate, bounded-cardinality specialization
+
+
+def _is_dynamic(arg) -> bool:
+    """Array-typed (or pytree-of-arrays) args trace by shape; everything else
+    (ints, bools, None) is bound statically — the leaves jit would
+    value-specialize on, and exactly what the probe mutates."""
+    return any(hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+               for leaf in jax.tree_util.tree_leaves(arg))
+
+
+def probe_shape_dependence(fn, variants) -> Optional[str]:
+    """None when output shapes agree across variants; else a description of
+    the first divergence.  Raises nothing — probe errors return 'raise:...'
+    so the caller can degrade to INFO.
+
+    Python-scalar args are held *static* during tracing (closed over, not
+    passed to ``eval_shape``) — abstracting them would make shape dependence
+    untraceable rather than observable."""
+    shapes = []
+    for args in variants:
+        dyn_idx = [i for i, a in enumerate(args) if _is_dynamic(a)]
+
+        def call(*dyn, _args=tuple(args), _idx=tuple(dyn_idx)):
+            full = list(_args)
+            for j, i in enumerate(_idx):
+                full[i] = dyn[j]
+            return fn(*full)
+
+        try:
+            out = jax.eval_shape(call, *(args[i] for i in dyn_idx))
+        except Exception as e:  # noqa: BLE001 — probe could not trace
+            return f"raise:{type(e).__name__}: {e}"
+        shapes.append(jax.tree_util.tree_map(
+            lambda x: (tuple(x.shape), str(x.dtype)), out))
+    first = shapes[0]
+    for i, s in enumerate(shapes[1:], 1):
+        if s != first:
+            return (f"variant 0 → {first} but variant {i} → {s}")
+    return None
+
+
+@register_pass
+class RecompileHazardPass(LintPass):
+    name = "recompile"
+    requires = ("entry_points",)
+
+    def run(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for spec in ctx.entry_points:
+            diff = probe_shape_dependence(spec.fn, spec.variants)
+            if diff is None:
+                continue
+            if diff.startswith("raise:"):
+                out.append(Finding(
+                    pass_name=self.name, code="probe-failed",
+                    severity=Severity.INFO, where=spec.name,
+                    message=f"shape probe could not trace {spec.name}: "
+                            f"{diff[6:]}"))
+            elif spec.bounded:
+                out.append(Finding(
+                    pass_name=self.name, code="bounded-specialization",
+                    severity=Severity.INFO, where=spec.name,
+                    message=f"{spec.name} specializes shapes on a declared "
+                            f"bounded argument ({diff})"))
+            else:
+                out.append(Finding(
+                    pass_name=self.name, code="shape-depends-on-python-value",
+                    severity=Severity.ERROR, where=spec.name,
+                    message=f"{spec.name}: output shapes depend on a Python "
+                            f"argument value — every distinct value "
+                            f"re-traces and re-compiles ({diff})"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the repo's jit entry points, probed at reduced shapes
+# ---------------------------------------------------------------------------
+
+def default_entry_points(cfg, plan) -> List[ProbeSpec]:
+    """Probe specs for the stepfn/scheduler jit surfaces.
+
+    Each probe mutates the Python-typed leaves a session passes per call:
+    the decode position ``t`` (advances every token), slot/page indices
+    (vary per request), and the eval batch — all must be shape-transparent.
+    """
+    import jax.numpy as jnp
+    from repro.core import stepfn
+    from repro.models import api as model_api
+
+    specs: List[ProbeSpec] = []
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(
+        lambda k: model_api.init_params(cfg, k), key)
+    params = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, cfg.compute_dtype), params)
+    B, S = 2, 64
+    serve_plan = type(plan)()        # single-device serving composition
+    fam = model_api.family_of(cfg)
+
+    def batch(sq):
+        b = {"tokens": jax.ShapeDtypeStruct((B, sq), jnp.int32)}
+        b.update(fam.extra_input_specs(cfg, B))
+        return b
+
+    caches = jax.eval_shape(
+        lambda p: model_api.init_cache(cfg, p, B, S), params)
+
+    serve = stepfn.make_serve_step(cfg, serve_plan, None)
+    specs.append(ProbeSpec(
+        name="serve_step[t]", fn=serve,
+        variants=[(params, jax.ShapeDtypeStruct((B,), jnp.int32), t, caches)
+                  for t in (3, 11)]))
+
+    slot = stepfn.make_slot_serve_step(cfg, serve_plan, None)
+    ts = jax.ShapeDtypeStruct((B,), jnp.int32)
+    specs.append(ProbeSpec(
+        name="slot_serve_step", fn=slot,
+        variants=[(params, jax.ShapeDtypeStruct((B,), jnp.int32), ts, caches)]))
+
+    specs.append(ProbeSpec(
+        name="cache_take_slot[i]",
+        fn=lambda c, i: stepfn.cache_take_slot(cfg, c, i),
+        variants=[(caches, 0), (caches, 1)]))
+    specs.append(ProbeSpec(
+        name="cache_zero_slot[i]",
+        fn=lambda c, i: stepfn.cache_zero_slot(cfg, c, i),
+        variants=[(caches, 0), (caches, 1)]))
+    slot1 = jax.eval_shape(
+        lambda p: model_api.init_cache(cfg, p, 1, S), params)
+    specs.append(ProbeSpec(
+        name="cache_insert_slot[i]",
+        fn=lambda c, s, i: stepfn.cache_insert_slot(cfg, c, s, i),
+        variants=[(caches, slot1, 0), (caches, slot1, 1)]))
+
+    prefill = stepfn.make_prefill(cfg, serve_plan, None, last_only=True)
+    specs.append(ProbeSpec(
+        name="prefill[last_only]", fn=prefill,
+        variants=[(params, batch(S))]))
+
+    eval_step = stepfn.make_eval_step(cfg, serve_plan, None)
+    eb = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+          "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+          "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+    eb.update(fam.extra_input_specs(cfg, B))
+    specs.append(ProbeSpec(
+        name="eval_step", fn=eval_step, variants=[(params, eb)]))
+    return specs

@@ -1,0 +1,72 @@
+"""Lint-pass registry.
+
+A pass is a stateless object with a ``name``, the lazy ``LintContext``
+artifacts it ``requires`` (so jaxpr-only passes never force an XLA compile),
+and ``run(ctx) -> [Finding]``.  Registration mirrors the model-family
+registry: last registration wins, so tests can shadow a pass.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, Report, Severity
+
+
+class LintPass:
+    name: str = "?"
+    requires: Sequence[str] = ()      # LintContext artifact names
+
+    def run(self, ctx) -> List[Finding]:
+        raise NotImplementedError
+
+
+_PASSES: Dict[str, LintPass] = {}
+_ORDER: List[str] = []
+
+
+def register_pass(obj):
+    """Class (or instance) decorator; keeps registration order for runs."""
+    p = obj() if isinstance(obj, type) else obj
+    if p.name == LintPass.name:
+        raise ValueError(f"{p!r} must set a name")
+    if p.name not in _PASSES:
+        _ORDER.append(p.name)
+    _PASSES[p.name] = p
+    return obj
+
+
+def get_pass(name: str) -> LintPass:
+    try:
+        return _PASSES[name]
+    except KeyError:
+        raise KeyError(f"unknown lint pass {name!r}; registered: "
+                       f"{', '.join(_ORDER)}") from None
+
+
+def registered_passes() -> List[str]:
+    return list(_ORDER)
+
+
+def run_passes(ctx, names: Optional[Sequence[str]] = None,
+               report: Optional[Report] = None) -> Report:
+    """Run passes (all registered by default) over one context.
+
+    A pass that raises becomes an ERROR finding instead of killing the run —
+    a crashing auditor must fail the gate, not skip it.  Passes whose required
+    artifacts the context cannot provide (e.g. kernel capture on a cell with
+    no Pallas kernels) are skipped silently.
+    """
+    report = report or Report(ctx.cell, meta=ctx.describe())
+    for name in (names if names is not None else registered_passes()):
+        p = get_pass(name)
+        if not all(ctx.provides(r) for r in p.requires):
+            continue
+        try:
+            report.extend(p.run(ctx))
+        except Exception as e:  # noqa: BLE001 — surfaced as a gating finding
+            report.add(Finding(
+                pass_name=p.name, code="pass-crashed",
+                severity=Severity.ERROR,
+                message=f"{type(e).__name__}: {e}", where="internal"))
+    return report

@@ -101,7 +101,9 @@ def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
 # parameter partition rules (path-regex → logical axes)
 # ---------------------------------------------------------------------------
 
-# Order matters: first match wins.  Axis names:
+# Order matters: first match wins.  Family-specific placements (MoE expert
+# tensors, SSM scan params) live on ``ModelFamily.param_sharding_hints`` and
+# are consulted *before* this list via ``extra_rules``.  Axis names:
 #   "tp"    — tensor-parallel (fast domain; paper's TP ≤ node rule)
 #   "fsdp"  — ZeRO-3 parameter sharding axis (the data axis)
 #   "stage" — pipeline stage axis (leading axis of stacked block params)
@@ -117,9 +119,6 @@ PARAM_RULES = [
     (r"\bw_out\b$", ("tp", "embed")),                       # MLP out-proj
     (r"\bb_in\b$", ("tp",)),
     (r"\bb_out\b$", ("embed",)),
-    (r"moe.*\brouter\b$", ("embed", None)),                 # router replicated
-    (r"moe.*\b(w_gate|w_up)\b$", ("expert", "embed", "tp")),
-    (r"moe.*\bw_out\b$", ("expert", "tp", "embed")),
     (r"\bin_proj\b$", ("embed", "tp")),                     # SSM / xLSTM
     (r"\bbc_proj\b$", ("embed", None)),
     (r"\bout_proj\b$", ("tp", "embed")),
@@ -133,10 +132,12 @@ PARAM_RULES = [
 ]
 
 
-def spec_for_path(path: str, shape: Tuple[int, ...], *, stacked_axes: int = 0) -> Tuple[Optional[str], ...]:
+def spec_for_path(path: str, shape: Tuple[int, ...], *, stacked_axes: int = 0,
+                  extra_rules: Tuple = ()) -> Tuple[Optional[str], ...]:
     """Logical axes for a parameter; ``stacked_axes`` leading axes are
     (layers) / (stage, layers) / (chunks, stage, layers) from scan, pipeline,
-    and interleaved virtual-stage stacking respectively."""
+    and interleaved virtual-stage stacking respectively.  ``extra_rules``
+    (family ``param_sharding_hints``) are matched before ``PARAM_RULES``."""
     prefix: Tuple[Optional[str], ...] = ()
     if stacked_axes == 1:
         prefix = ("layers",)
@@ -144,7 +145,7 @@ def spec_for_path(path: str, shape: Tuple[int, ...], *, stacked_axes: int = 0) -
         prefix = ("stage", "layers")
     elif stacked_axes == 3:
         prefix = ("chunks", "stage", "layers")
-    for pat, axes in PARAM_RULES:
+    for pat, axes in tuple(extra_rules) + tuple(PARAM_RULES):
         if re.search(pat, path):
             axes = tuple(axes)
             if len(axes) + len(prefix) < len(shape):  # e.g. (E,d,ff) expert leaves
@@ -153,12 +154,13 @@ def spec_for_path(path: str, shape: Tuple[int, ...], *, stacked_axes: int = 0) -
     return prefix + (None,) * (len(shape) - len(prefix))
 
 
-def tree_logical_specs(params, *, stacked_axes_fn=None):
+def tree_logical_specs(params, *, stacked_axes_fn=None, extra_rules: Tuple = ()):
     """Mirror tree of logical-axis tuples for a parameter pytree."""
     def visit(path, leaf):
         pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         sa = stacked_axes_fn(pstr) if stacked_axes_fn else 0
-        return spec_for_path(pstr, leaf.shape, stacked_axes=sa)
+        return spec_for_path(pstr, leaf.shape, stacked_axes=sa,
+                             extra_rules=extra_rules)
     return jax.tree_util.tree_map_with_path(visit, params)
 
 

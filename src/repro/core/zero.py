@@ -44,10 +44,27 @@ def stacked_axes_fn(cfg: ModelConfig, plan: ParallelismConfig):
     return f
 
 
+def family_hints(cfg: Optional[ModelConfig]) -> Tuple:
+    """``param_sharding_hints`` for cfg's family, () when the family is
+    unknown/unregistered (plain-pytree unit tests)."""
+    if cfg is None:
+        return ()
+    try:
+        from repro.models.registry import family_of
+        return tuple(family_of(cfg).param_sharding_hints(cfg))
+    except KeyError:
+        return ()
+
+
 def param_shardings(cfg: ModelConfig, params_tree, mesh: Mesh,
                     plan: ParallelismConfig):
-    """NamedSharding tree for the (possibly pipeline-stacked) param tree."""
-    specs = shd.tree_logical_specs(params_tree, stacked_axes_fn=stacked_axes_fn(cfg, plan))
+    """NamedSharding tree for the (possibly pipeline-stacked) param tree.
+
+    Family ``param_sharding_hints`` take precedence over the generic
+    ``PARAM_RULES`` — this is where MoE expert / SSM scan placements land."""
+    specs = shd.tree_logical_specs(params_tree,
+                                   stacked_axes_fn=stacked_axes_fn(cfg, plan),
+                                   extra_rules=family_hints(cfg))
     return shd.resolve_tree(specs, mesh, axis_mapping(plan), shapes_tree=params_tree)
 
 

@@ -59,10 +59,30 @@ def _serve_artifacts(cfg: ModelConfig, plan: ParallelismConfig, mesh, shape,
     return lowered, {"model_flops": useful}
 
 
+def _lint_cell(rec: dict, hlo: str, cfg, plan, mesh, kind: str,
+               verbose: bool) -> None:
+    """``--lint``: run the HLO-level audit passes over an already-compiled
+    dry-run cell (collectives vs plan; donation/jaxpr passes need the richer
+    contexts ``repro.launch.lint`` builds, so they stay there)."""
+    from repro.analysis.context import LintContext
+    from repro.analysis.registry import run_passes
+    ctx = LintContext(cell=f"{rec['arch']}__{rec['shape']}__{rec['mesh']}",
+                      cfg=cfg, plan=plan, mesh=mesh, kind=kind,
+                      lower_fn=lambda: None)
+    ctx._cache["hlo"] = hlo              # already compiled — reuse the text
+    report = run_passes(ctx)
+    rec["lint"] = report.to_json()
+    worst = report.worst()
+    if verbose:
+        print(report.format_text())
+    rec["lint_worst"] = worst.name if worst is not None else None
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
              verbose: bool = True, sp: bool = False, moe: str = "einsum",
              prefill_last_only: bool = False, remat: str = None,
-             gather_once: bool = False, tag: str = "") -> dict:
+             gather_once: bool = False, tag: str = "",
+             lint: bool = False) -> dict:
     cfg = cfg_mod.get_config(arch)
     shape = shapes_mod.SHAPES[shape_name]
     ok, why = shapes_mod.applicable(cfg, shape)
@@ -127,6 +147,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
             per_call /= mesh.devices.size
             cc_flops = {"tpu_custom_call": per_call, "MosaicTPU": per_call}
         walk = analyze_module(hlo, custom_call_flops=cc_flops)  # trip-weighted
+        if lint:
+            _lint_cell(rec, hlo, cfg, plan, mesh, shape.kind, verbose)
         t1 = time.time()
         rec.update({
             "status": "ok",
@@ -192,6 +214,9 @@ def main():
     ap.add_argument("--serve-tp", type=int, default=None,
                     help="override serving TP degree (head-aligned hillclimb)")
     ap.add_argument("--tag", default="", help="suffix for result filenames")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the lowering-audit HLO passes over each cell "
+                         "(full audit incl. jaxpr/kernels: repro.launch.lint)")
     args = ap.parse_args()
 
     out_dir = Path(args.out)
@@ -211,7 +236,8 @@ def main():
             results.append(run_cell(
                 arch, shape, multi_pod=mp, out_dir=out_dir, sp=args.sp,
                 moe=args.moe_impl, prefill_last_only=args.prefill_last_only,
-                remat=args.remat, gather_once=args.gather_once, tag=args.tag))
+                remat=args.remat, gather_once=args.gather_once, tag=args.tag,
+                lint=args.lint))
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skip" for r in results)
     n_fail = sum(r["status"] == "fail" for r in results)

@@ -17,6 +17,7 @@ Shapes in SPMD HLO are per-partition, so all sums are *per device*.
 
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -310,3 +311,146 @@ def analyze_module(hlo: str,
         walk(entry, 1.0, True)
     totals["collective_total"] = sum(totals[k] for k in COLLECTIVES)
     return totals
+
+
+# ---------------------------------------------------------------------------
+# per-op collective attribution (the lowering auditor's view)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One collective instruction, attributed to its enclosing computation.
+
+    ``in_loop``/``trip_count`` reflect the *call path* from ENTRY: an op inside
+    a while body (scan/pipeline superstep) has ``in_loop=True`` and
+    ``trip_count`` = the product of enclosing ``known_trip_count``s.  Shapes in
+    SPMD HLO are per-partition, so ``bytes`` is per device for ONE execution
+    (multiply by ``trip_count`` for the per-step total)."""
+    kind: str                 # all-reduce | all-gather | reduce-scatter | ...
+    name: str                 # HLO instruction name
+    bytes: int                # output bytes, one execution, per device
+    computation: str          # enclosing computation name
+    in_loop: bool             # inside a while body on this call path
+    trip_count: int           # product of enclosing known_trip_counts
+    is_async: bool            # -start/-done pair (overlappable)
+    replica_groups: str = ""  # raw replica_groups attribute text
+
+
+# covers the three printer formats: {{0,1},{2,3}}, {}, and [2,2]<=[4]
+_REPLICA_GROUPS = re.compile(
+    r"replica_groups=(\{\{[\d,]+(?:\},\{[\d,]+)*\}\}|\{\}|\[[\d,]*\]<=\[[\d,]*\])")
+
+
+def collective_ops(hlo: str) -> List[CollectiveOp]:
+    """All collective instructions reachable from ENTRY, with loop context.
+
+    Async pairs are counted once (at the ``-start``); a computation reached
+    through several call sites is reported once per call path, mirroring the
+    trip-weighted walk in :func:`analyze_module`."""
+    comps, entry, shapes = _parse_module(hlo)
+    out: List[CollectiveOp] = []
+    seen_stack = set()
+
+    def walk(comp_name: str, mult: int, in_loop: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.add(comp_name)
+        for op in comp.ops:
+            kind = op["kind"]
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVES and not kind.endswith("-done"):
+                rg = _REPLICA_GROUPS.search(op["line"])
+                out.append(CollectiveOp(
+                    kind=base, name=op["name"],
+                    bytes=int(_shape_bytes(op["shape"])),
+                    computation=comp_name, in_loop=in_loop,
+                    trip_count=int(mult),
+                    is_async=kind.endswith("-start"),
+                    replica_groups=rg.group(1) if rg else ""))
+            if kind == "while":
+                body = op.get("called")
+                if body:
+                    walk(body, mult * op.get("trip", 1), True)
+                cm = _COND.search(op["line"])
+                if cm:
+                    walk(cm.group(1), mult * op.get("trip", 1), True)
+                continue
+            if kind in ("fusion", "call", "conditional", "custom-call",
+                        "async-start"):
+                called = op.get("called")
+                if called:
+                    walk(called, mult, in_loop)
+        seen_stack.discard(comp_name)
+
+    if entry:
+        walk(entry, 1, False)
+    return out
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, Dict[str, int]]:
+    """Aggregate per kind: op count, one-execution bytes, trip-weighted bytes,
+    and how many sit inside loop bodies — the golden-HLO regression surface."""
+    out: Dict[str, Dict[str, int]] = {}
+    for op in ops:
+        rec = out.setdefault(op.kind, {"count": 0, "bytes": 0,
+                                       "weighted_bytes": 0, "in_loop": 0})
+        rec["count"] += 1
+        rec["bytes"] += op.bytes
+        rec["weighted_bytes"] += op.bytes * op.trip_count
+        rec["in_loop"] += int(op.in_loop)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input/output buffer aliasing (donation audit)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AliasEntry:
+    """One ``input_output_alias`` record from the HloModule header:
+    output index tuple → (parameter number, parameter sub-index)."""
+    output_index: Tuple[int, ...]
+    param_number: int
+    param_index: Tuple[int, ...]
+    kind: str                 # may-alias | must-alias
+
+
+# entries end in "-alias)", so match the block up to the ") }" that closes it
+_ALIAS_BLOCK = re.compile(r"input_output_alias=\{(.*?\))\s*\}", re.S)
+_ALIAS_ENTRY = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+)\s*,\s*\{([\d,\s]*)\}\s*,\s*(may-alias|must-alias)\)")
+
+
+def _idx_tuple(s: str) -> Tuple[int, ...]:
+    s = s.strip()
+    return tuple(int(x) for x in s.split(",")) if s else ()
+
+
+def input_output_aliases(hlo: str) -> List[AliasEntry]:
+    """Parse the module header's ``input_output_alias`` map (empty when the
+    compiled program aliases nothing — e.g. donation was dropped)."""
+    head = hlo.split("\n\n", 1)[0]
+    m = _ALIAS_BLOCK.search(head)
+    if not m:
+        return []
+    return [AliasEntry(_idx_tuple(e.group(1)), int(e.group(2)),
+                       _idx_tuple(e.group(3)), e.group(4))
+            for e in _ALIAS_ENTRY.finditer(m.group(1))]
+
+
+_PARAM_NUM = re.compile(r"parameter\((\d+)\)")
+
+
+def entry_parameter_bytes(hlo: str) -> Dict[int, int]:
+    """parameter number → buffer bytes, from the ENTRY computation's
+    ``parameter(N)`` instructions (per-partition shapes under SPMD)."""
+    comps, entry, _ = _parse_module(hlo)
+    out: Dict[int, int] = {}
+    if entry and entry in comps:
+        for op in comps[entry].ops:
+            if op["kind"] == "parameter":
+                pm = _PARAM_NUM.search(op["line"])
+                if pm:
+                    out[int(pm.group(1))] = int(_shape_bytes(op["shape"]))
+    return out

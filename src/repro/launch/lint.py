@@ -1,0 +1,20 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+"""Lowering auditor CLI — static plan/sharding/kernel lint at paper scale.
+
+Must own the interpreter before jax initializes (it pins 16 fake CPU
+devices), hence the flag assignment above the docstring; all logic lives in
+``repro.analysis.cli``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.lint --arch granite_3_2b
+  PYTHONPATH=src python -m repro.launch.lint --all-configs --fail-on warning
+  PYTHONPATH=src python -m repro.launch.lint --prove-gate
+  PYTHONPATH=src python -m repro.launch.lint --all-configs --update-baseline
+"""
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

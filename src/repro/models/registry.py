@@ -134,6 +134,17 @@ class ModelFamily:
         (used by the dry-run to build abstract batch specs)."""
         return {}
 
+    def param_sharding_hints(self, cfg: ModelConfig) -> tuple:
+        """((path-regex, logical-axes), ...) rules consulted *before* the
+        generic ``core.sharding.PARAM_RULES`` when resolving this family's
+        parameter shardings.  This is where a family declares placements the
+        generic rules cannot know: MoE expert tensors carry an ``expert``
+        axis (so ``zero.param_shardings`` shards them expert-parallel and the
+        collective audit expects the resulting all-to-alls), SSM scan params
+        are pinned replicated.  First match wins within the hints; unmatched
+        paths fall through to ``PARAM_RULES``."""
+        return ()
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<ModelFamily {self.name!r} ({type(self).__name__})>"
 

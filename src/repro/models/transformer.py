@@ -603,13 +603,40 @@ class DecoderOnlyLM(ModelFamily):
 class MoELM(DecoderOnlyLM):
     """Routed-FFN variant; routing/EP live in ``repro.models.moe`` blocks."""
 
+    def param_sharding_hints(self, cfg):
+        # The expert (E, d, ff) stacks carry an explicit "expert" axis; the
+        # router stays replicated so every rank routes identically.  These
+        # hints are load-bearing: without them the generic MLP rules would
+        # match w_gate/w_up/w_out and mis-shard the expert dim.
+        return (
+            (r"moe.*\brouter\b$", ("embed", None)),
+            (r"moe.*\b(w_gate|w_up)\b$", ("expert", "embed", "tp")),
+            (r"moe.*\bw_out\b$", ("expert", "tp", "embed")),
+        )
+
+
+# SSD/mLSTM scan params: per-head decay/skip/dt vectors are tiny and enter
+# the selective-scan recurrence elementwise — pinned replicated so no rule
+# below them ever tries to split the head dim across tp.
+_SSM_SCAN_HINTS = (
+    (r"\b(A_log|D|dt_bias)\b$", (None,)),
+    (r"\bbc_proj\b$", ("embed", None)),       # B/C/dt projection: state dim whole
+    (r"\bconv\b$", (None, "tp")),             # depthwise conv: channels on tp
+)
+
 
 class SSMLM(DecoderOnlyLM):
     """xLSTM stack (mLSTM scan + unstacked sLSTM blocks, see ``xlstm.py``)."""
 
+    def param_sharding_hints(self, cfg):
+        return _SSM_SCAN_HINTS
+
 
 class HybridLM(DecoderOnlyLM):
     """Hymba-style attention+mamba hybrid (``ssm.py`` blocks)."""
+
+    def param_sharding_hints(self, cfg):
+        return _SSM_SCAN_HINTS
 
 
 class VLM(DecoderOnlyLM):

@@ -5,6 +5,8 @@
 ``InferenceSession`` — params → cache-populating prefill + ring-buffer
                        decode → batched ``generate()`` / continuous-batching
                        ``serve()``.
+``EvalSession``      — params → jitted eval step → token-weighted perplexity
+                       sweeps; abstract mode feeds the lowering auditor.
 
 Every driver (``launch/train``, ``launch/serve``, ``launch/dryrun``,
 ``benchmarks/run``, the examples) composes exclusively through these.
@@ -12,6 +14,7 @@ Every driver (``launch/train``, ``launch/serve``, ``launch/dryrun``,
 
 from repro.session.train import TrainSession  # noqa: F401
 from repro.session.infer import InferenceSession  # noqa: F401
+from repro.session.evalsess import EvalSession  # noqa: F401
 from repro.session.scheduler import (  # noqa: F401
     ContinuousBatchingScheduler, Request, RequestQueue, ServingStats)
 from repro.session.kvpool import (  # noqa: F401

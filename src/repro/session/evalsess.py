@@ -1,0 +1,149 @@
+"""``EvalSession`` — held-out evaluation over the same eval-step surface
+``TrainSession.evaluate`` jits, without dragging optimizer state along.
+
+Two modes:
+
+* **live** — ``evaluate(batch)`` per batch and ``perplexity(batches)`` for a
+  token-weighted sweep (per-batch mean xent re-weighted by that batch's
+  masked token count, so ragged final batches don't skew the aggregate).
+* **abstract** — ``lower(seq_len=...)`` / ``make_jaxpr(seq_len=...)`` build
+  the sharded eval lowering over ``ShapeDtypeStruct`` stand-ins; the lint
+  auditor (``repro.analysis``) reads its HLO/jaxpr.
+
+Typical use::
+
+    ev = EvalSession.from_train_session(sess)      # share trained params
+    report = ev.perplexity(sess.batches(s) for s in range(100, 110))
+    report["perplexity"], report["n_tokens"]
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Iterable, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.core import stepfn, zero
+from repro.core.recipe import ParallelismConfig
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+from repro.session.train import resolve_config
+
+
+class EvalSession:
+    def __init__(self, cfg: ModelConfig, *,
+                 plan: Optional[ParallelismConfig] = None,
+                 params: Any = None, mesh=None, seed: int = 0,
+                 abstract: bool = False):
+        self.cfg = cfg
+        self.plan = plan if plan is not None else ParallelismConfig()
+        self.mesh = mesh
+        self.abstract = abstract
+        if params is None:
+            key = jax.random.PRNGKey(seed)
+            if abstract:
+                params = jax.eval_shape(
+                    lambda k: model_api.init_params(cfg, k), key)
+            else:
+                params = model_api.init_params(cfg, key)
+            params = jax.tree_util.tree_map(
+                lambda x: (jax.ShapeDtypeStruct(x.shape, cfg.compute_dtype)
+                           if abstract else x.astype(cfg.compute_dtype)),
+                params)
+        self.params = params
+        if not abstract and mesh is not None:
+            self.params = jax.device_put(
+                self.params, zero.param_shardings(cfg, self.params, mesh,
+                                                  self.plan))
+        self._eval_step = None
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_recipe(cls, arch: Union[str, ModelConfig], *,
+                    reduced: bool = False,
+                    plan: Optional[ParallelismConfig] = None,
+                    params: Any = None, mesh=None, seed: int = 0,
+                    abstract: bool = False) -> "EvalSession":
+        cfg = resolve_config(arch, reduced=reduced)
+        return cls(cfg, plan=plan, params=params, mesh=mesh, seed=seed,
+                   abstract=abstract)
+
+    @classmethod
+    def from_train_session(cls, sess) -> "EvalSession":
+        """Evaluate a ``TrainSession``'s current weights in place (no copy,
+        no cast — the eval step reads whatever dtype training holds)."""
+        return cls(sess.cfg, plan=sess.plan, params=sess.state["params"],
+                   mesh=sess.mesh, abstract=sess.abstract)
+
+    # ------------------------------------------------------------------
+    # live evaluation
+    # ------------------------------------------------------------------
+    @property
+    def eval_step(self):
+        if self._eval_step is None:
+            self._eval_step = jax.jit(
+                stepfn.make_eval_step(self.cfg, self.plan, self.mesh))
+        return self._eval_step
+
+    def evaluate(self, batch) -> Dict[str, Any]:
+        """Metrics on one batch + the masked token count the sweep weights
+        by (``loss_mask`` sum, else every label position)."""
+        if self.abstract:
+            raise RuntimeError("abstract sessions cannot evaluate; use .lower()")
+        metrics = dict(self.eval_step(self.params, batch))
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            n_tok = float(np.sum(np.asarray(mask)))
+        else:
+            n_tok = float(np.prod(batch["tokens"].shape))
+        metrics["n_tokens"] = n_tok
+        return metrics
+
+    def perplexity(self, batches: Iterable[Any]) -> Dict[str, float]:
+        """Token-weighted perplexity sweep: exp(Σ xent_b·n_b / Σ n_b)."""
+        nll_sum, tok_sum, n_batches = 0.0, 0.0, 0
+        for batch in batches:
+            m = self.evaluate(batch)
+            nll_sum += float(m["xent"]) * m["n_tokens"]
+            tok_sum += m["n_tokens"]
+            n_batches += 1
+        if tok_sum == 0:
+            raise ValueError("perplexity sweep saw no loss-bearing tokens")
+        xent = nll_sum / tok_sum
+        return {"perplexity": math.exp(min(xent, 700.0)), "xent": xent,
+                "n_tokens": tok_sum, "n_batches": n_batches}
+
+    # ------------------------------------------------------------------
+    # abstract lowering (the lint auditor's eval cell)
+    # ------------------------------------------------------------------
+    def _batch_specs(self, seq_len: int, global_batch: Optional[int]):
+        from repro.launch import shapes as shapes_mod
+        gb = global_batch if global_batch is not None else self.plan.global_batch
+        shape = shapes_mod.ShapeSpec("eval", "train", seq_len, gb)
+        return shapes_mod.train_input_specs(self.cfg, shape)
+
+    def lower(self, *, seq_len: int = 128,
+              global_batch: Optional[int] = None):
+        """Lower the sharded eval step abstractly (compile-only path)."""
+        if self.mesh is None:
+            raise RuntimeError("lower() needs a mesh")
+        specs = self._batch_specs(seq_len, global_batch)
+        p_sh = zero.param_shardings(self.cfg, self.params, self.mesh, self.plan)
+        b_sh = stepfn.batch_shardings(specs, self.mesh)
+        step = stepfn.make_eval_step(self.cfg, self.plan, self.mesh)
+        return jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+            self.params, specs)
+
+    def make_jaxpr(self, *, seq_len: int = 128,
+                   global_batch: Optional[int] = None):
+        specs = self._batch_specs(seq_len, global_batch)
+        step = stepfn.make_eval_step(self.cfg, self.plan, self.mesh)
+        return jax.make_jaxpr(step)(self.params, specs)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        kind = "abstract" if self.abstract else "live"
+        return f"<EvalSession {self.cfg.name} ({kind}) plan={self.plan}>"

@@ -125,12 +125,16 @@ class InferenceSession:
     @property
     def insert_slot(self):
         """Jitted slot insert: (caches, slot_caches, i) → caches with the
-        width-1 ``slot_caches`` written into request slot ``i``."""
+        width-1 ``slot_caches`` written into request slot ``i``.  ``caches``
+        is donated (callers rebind it) — the lowering auditor's donation pass
+        confirmed the alias, so admission updates in place instead of copying
+        the whole cache."""
         if self._insert_slot is None:
             cfg = self.cfg
             self._insert_slot = jax.jit(
                 lambda caches, slot, i: stepfn.cache_insert_slot(
-                    cfg, caches, slot, i))
+                    cfg, caches, slot, i),
+                donate_argnums=(0,))
         return self._insert_slot
 
     @property

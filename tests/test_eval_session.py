@@ -1,0 +1,86 @@
+"""EvalSession: live perplexity sweeps over the TrainSession eval surface."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.session import EvalSession, TrainSession
+
+
+def _batch(key, cfg, B, S, mask_frac=None):
+    kt, kl = jax.random.split(key)
+    b = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size)}
+    if mask_frac is not None:
+        n = int(B * S * mask_frac)
+        mask = np.zeros((B * S,), np.float32)
+        mask[:n] = 1.0
+        b["loss_mask"] = jnp.asarray(mask.reshape(B, S))
+    return b
+
+
+@pytest.fixture(scope="module")
+def ev():
+    return EvalSession.from_recipe("granite_3_2b", reduced=True)
+
+
+def test_perplexity_sweep(ev):
+    key = jax.random.PRNGKey(0)
+    batches = [_batch(k, ev.cfg, 2, 32) for k in jax.random.split(key, 3)]
+    rep = ev.perplexity(batches)
+    assert rep["n_batches"] == 3
+    assert rep["n_tokens"] == 3 * 2 * 32
+    assert 0.0 < rep["xent"] < 700.0
+    assert math.isfinite(rep["perplexity"])
+    # random weights ≈ uniform over the vocab
+    assert rep["perplexity"] == pytest.approx(
+        math.exp(rep["xent"]))
+
+
+def test_token_weighted_aggregation(ev):
+    """The sweep must weight each batch by its masked token count, matching
+    a hand-rolled Σ xent·n / Σ n over per-batch evaluate() calls."""
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    batches = [_batch(k1, ev.cfg, 2, 32, mask_frac=1.0),
+               _batch(k2, ev.cfg, 2, 32, mask_frac=0.25)]
+    per = [ev.evaluate(b) for b in batches]
+    want = sum(float(m["xent"]) * m["n_tokens"] for m in per) / \
+        sum(m["n_tokens"] for m in per)
+    rep = ev.perplexity(batches)
+    assert rep["n_tokens"] == 2 * 32 * (1.0 + 0.25)
+    assert rep["xent"] == pytest.approx(want, rel=1e-6)
+
+
+def test_n_tokens_respects_loss_mask(ev):
+    b = _batch(jax.random.PRNGKey(2), ev.cfg, 2, 32, mask_frac=0.5)
+    assert ev.evaluate(b)["n_tokens"] == 2 * 32 * 0.5
+    b = _batch(jax.random.PRNGKey(2), ev.cfg, 2, 32)
+    assert ev.evaluate(b)["n_tokens"] == 2 * 32
+
+
+def test_zero_token_sweep_raises(ev):
+    b = _batch(jax.random.PRNGKey(3), ev.cfg, 2, 32, mask_frac=0.0)
+    with pytest.raises(ValueError, match="no loss-bearing tokens"):
+        ev.perplexity([b])
+
+
+def test_from_train_session_shares_params():
+    sess = TrainSession.from_recipe("granite_3_2b", reduced=True)
+    ev2 = EvalSession.from_train_session(sess)
+    leaves_t = jax.tree_util.tree_leaves(sess.state["params"])
+    leaves_e = jax.tree_util.tree_leaves(ev2.params)
+    assert all(a is b for a, b in zip(leaves_t, leaves_e))  # no copy
+    b = _batch(jax.random.PRNGKey(4), sess.cfg, 2, 32)
+    assert float(ev2.evaluate(b)["xent"]) == pytest.approx(
+        float(sess.evaluate(b)["xent"]))
+
+
+def test_abstract_session_refuses_live_eval():
+    ev3 = EvalSession.from_recipe("granite_3_2b", reduced=True, abstract=True)
+    with pytest.raises(RuntimeError, match="abstract"):
+        ev3.evaluate({"tokens": jnp.zeros((2, 8), jnp.int32)})

@@ -1,0 +1,162 @@
+"""Lowering-auditor tests that need the multi-device lint world: run in
+subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=16 (the
+main test process keeps the default single device, per the assignment).
+
+Includes the golden-HLO collective regression: a fixed (config × plan) cell
+must lower to an exact set of collective kinds/counts/bytes.  Regenerate the
+golden file after a *reviewed* partitioning change with
+``REPRO_REGEN_GOLDEN=1 pytest tests/test_lint_distributed.py -k golden``.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+GOLDEN = Path(__file__).resolve().parent / "golden_collectives.json"
+
+
+def _run(code: str, devices: int = 16) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("REPRO_REGEN_GOLDEN", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_lint_cell_clean_with_committed_baseline():
+    """The acceptance bar: a registered config's lint cell gates clean with
+    the committed suppression file."""
+    out = _run("""
+        from pathlib import Path
+        from repro.analysis.cli import DEFAULT_BASELINE, run_lint
+        rc = run_lint(["granite_3_2b"], baseline_path=DEFAULT_BASELINE,
+                      fail_on="warning", verbose=False)
+        print("RC", rc)
+    """)
+    assert "RC 0" in out
+
+
+def test_moe_lint_cell_clean_with_committed_baseline():
+    out = _run("""
+        from repro.analysis.cli import DEFAULT_BASELINE, run_lint
+        rc = run_lint(["olmoe_1b_7b"], baseline_path=DEFAULT_BASELINE,
+                      fail_on="warning", verbose=False)
+        print("RC", rc)
+    """)
+    assert "RC 0" in out
+
+
+def test_prove_gate_multi_device():
+    """Every pass family must catch its seeded violation — including the
+    collectives seed, which needs ≥2 devices."""
+    out = _run("""
+        msgs = []
+        from repro.analysis.cli import prove_gate
+        rc = prove_gate(log=msgs.append)
+        assert not any("skipped" in m for m in msgs), msgs
+        print("RC", rc)
+    """)
+    assert "RC 0" in out
+
+
+def test_lint_flags_unexpected_collective_without_baseline():
+    """A finding the baseline suppresses must still gate when the baseline is
+    withheld — proves suppression is doing the work, not a weakened audit."""
+    out = _run("""
+        from repro.analysis.cli import lint_cell
+        rep = lint_cell("whisper_base", baseline=None)
+        codes = {f.code for f in rep.findings}
+        print("CODES", sorted(codes))
+    """)
+    assert "f32-upcast-dot" in out        # sdpa softmax oracle, baselined
+
+
+def test_collectives_match_plan_predictions():
+    """Structural audit: the HLO of a tp×pp×dp train cell contains each
+    plan-predicted collective kind, and no kind outside prediction+baseline."""
+    out = _run("""
+        from repro.analysis.cli import build_context
+        from repro.analysis.collectives import expected_collectives, mesh_ways
+        from repro.launch.hlo_analysis import collective_ops
+        ctx = build_context("granite_3_2b")
+        with ctx.mesh:
+            ops = collective_ops(ctx.hlo)
+        kinds = {o.kind for o in ops}
+        expected = set(expected_collectives(
+            ctx.cfg, ctx.plan, mesh_ways(ctx.mesh)))
+        print("KINDS", sorted(kinds))
+        assert "all-reduce" in kinds          # grad + tp reductions
+        assert "collective-permute" in kinds  # pp stage rotation
+        assert kinds <= expected, (kinds, expected)
+    """)
+    assert "KINDS" in out
+
+
+def test_golden_collective_summary():
+    """Exact collective kind/count/bytes for fixed plans.  Any partitioning
+    drift (a new all-gather, doubled reduce bytes) fails here even if the
+    lint expectations would still class it as 'expected'."""
+    regen = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
+    out = _run("""
+        import json
+        from repro.analysis.cli import build_context
+        from repro.launch.hlo_analysis import collective_ops, collective_summary
+        got = {}
+        for arch in ("granite_3_2b", "olmoe_1b_7b"):
+            ctx = build_context(arch)
+            with ctx.mesh:
+                ops = collective_ops(ctx.hlo)
+            got[ctx.cell] = {
+                k: {"count": v["count"], "bytes": v["bytes"]}
+                for k, v in sorted(collective_summary(ops).items())}
+        print("GOLDEN" + json.dumps(got, sort_keys=True))
+    """)
+    line = next(l for l in out.splitlines() if l.startswith("GOLDEN"))
+    got = json.loads(line[len("GOLDEN"):])
+    if regen or not GOLDEN.exists():
+        GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        if not regen:
+            raise AssertionError("golden file was missing — wrote it; rerun")
+        return
+    want = json.loads(GOLDEN.read_text())
+    assert got == want, (
+        "collective fingerprint drift vs tests/golden_collectives.json "
+        "(REPRO_REGEN_GOLDEN=1 to accept a reviewed change)\n"
+        f"got: {json.dumps(got, indent=1, sort_keys=True)}")
+
+
+def test_eval_and_decode_kinds_build():
+    """The eval/decode lint contexts lower and produce HLO (the --kind
+    surface the CLI exposes)."""
+    out = _run("""
+        from repro.analysis.cli import build_context
+        for kind in ("eval", "decode"):
+            ctx = build_context("granite_3_2b", kind=kind)
+            with ctx.mesh:
+                hlo = ctx.hlo
+            assert "ENTRY" in hlo
+            print("OK", kind, ctx.cell)
+    """)
+    assert "OK eval" in out and "OK decode" in out
+
+
+def test_dryrun_lint_flag_records_report(tmp_path):
+    """launch/dryrun.py --lint attaches a lint report to the cell record."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "granite_3_2b",
+         "--shape", "train_4k", "--lint", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads((tmp_path / "granite_3_2b__train_4k__pod.json").read_text())
+    assert rec["status"] == "ok"
+    assert "lint" in rec and rec["lint"]["cell"].startswith("granite_3_2b")
+    assert rec["lint_worst"] in (None, "INFO", "WARNING")
